@@ -1,0 +1,81 @@
+"""Profiling tool for the dry-run artifact: per-collective attribution.
+
+Lists the top collective instructions (result bytes x loop multiplicity)
+with their computation — the 'profile' the §Perf hypothesis loop reads,
+since wall-clock profiling is impossible on this CPU-only host.
+
+  PYTHONPATH=src python benchmarks/inspect_collectives.py \
+      --arch qwen3-moe-30b-a3b --shape prefill_32k [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+
+
+def main() -> None:
+    from repro import analysis, partitioning
+    from repro.launch import dryrun
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    jitted, fargs, (cfg, shape, mesh, rules, meta) = dryrun.build_case(
+        args.arch, args.shape, args.multi_pod)
+    with mesh, partitioning.use_rules(rules):
+        compiled = jitted.lower(*fargs).compile()
+        hlo = compiled.as_text()
+
+    comps, entry = analysis.parse_hlo_computations(hlo)
+    mult = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    for _ in range(len(comps)):
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for name, lines in comps.items():
+            m = mult[name]
+            if not m:
+                continue
+            for line in lines:
+                wm = analysis._WHILE_RE.search(line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trips = analysis._trip_count(comps.get(cond, []))
+                    new[body] = new.get(body, 0.0) + m * trips
+                    new[cond] = new.get(cond, 0.0) + m * (trips + 1)
+                    continue
+                for cm in analysis._CALL_RE.finditer(line):
+                    if cm.group(1) in comps:
+                        new[cm.group(1)] = new.get(cm.group(1), 0.0) + m
+        if new == mult:
+            break
+        mult = new
+
+    rows = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if not m:
+            continue
+        for line in lines:
+            cm = analysis._COLLECTIVE_RE.search(line)
+            if cm:
+                kind = cm.group(1)
+                b = analysis._result_bytes(line, kind)
+                rows.append((b * m, m, b, kind, name, line))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"\n{args.arch} x {args.shape}: {len(rows)} collective "
+          f"instructions, {total / 1e9:.1f} GB/device total "
+          f"(~{total / 50e9:.2f}s serial ICI)\n")
+    for scaled, m, raw, kind, comp, line in rows[: args.top]:
+        print(f"{scaled / 1e9:9.2f}GB x{m:5.0f} {raw / 1e6:9.1f}MB "
+              f"{kind:19s} {comp[:30]:30s} {line[:100]}")
+
+
+if __name__ == "__main__":
+    main()

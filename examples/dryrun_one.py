@@ -1,0 +1,43 @@
+"""Example: inspect the production-mesh lowering of one (arch x shape).
+
+Shows the public dry-run API: build the abstract case, lower, compile, and
+read the roofline terms — the workflow used for every entry in
+EXPERIMENTS.md §Roofline.
+
+  PYTHONPATH=src python examples/dryrun_one.py --arch rwkv6-3b \
+      --shape decode_32k
+"""
+# MUST precede any jax-importing module (device count locks on first use).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+
+
+def main() -> None:
+    from repro.launch import dryrun
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    rec = dryrun.run_case(args.arch, args.shape, args.multi_pod,
+                          out_dir="/tmp/dryrun_example")
+    roof = rec["roofline"]
+    print(f"\n{args.arch} x {args.shape} on "
+          f"{'2x16x16' if args.multi_pod else '16x16'} mesh:")
+    print(f"  compile: {rec['compile_s']}s; "
+          f"HLO text: {rec['hlo_bytes_text'] / 1e6:.1f}MB")
+    print(f"  roofline: compute {roof['t_compute_s']:.3e}s | "
+          f"memory {roof['t_memory_s']:.3e}s | "
+          f"collective {roof['t_collective_s']:.3e}s")
+    print(f"  dominant: {roof['dominant']}; useful flops "
+          f"{roof['useful_flops_frac']:.2f}")
+    print(f"  collectives: { {k: f'{v/1e9:.2f}GB' for k, v in roof['collective_bytes'].items()} }")
+
+
+if __name__ == "__main__":
+    main()

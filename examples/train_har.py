@@ -1,0 +1,85 @@
+"""End-to-end driver: train the paper's activity-recognition LSTM to
+convergence (a few hundred steps) and reproduce the §4 evaluation protocol
+(latency over 100 test cases, per-plan).
+
+  PYTHONPATH=src python examples/train_har.py --steps 300 --hidden 32 \
+      --layers 2
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.mobirnn_lstm import LSTMConfig
+from repro.core import lstm
+from repro.data import har
+from repro.optim import AdamW, warmup_cosine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = LSTMConfig().with_complexity(args.hidden, args.layers)
+    print(f"config: {cfg.name} ({cfg.n_layers}L x {cfg.hidden}H)")
+    train, test = har.make_har()
+    print(f"data: {len(train.y)} train / {len(test.y)} test windows "
+          f"(UCI HAR protocol)")
+
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=warmup_cosine(args.lr, args.steps // 10, args.steps),
+                weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        loss, grads = jax.value_and_grad(lstm.loss_fn)(params, x, y, cfg)
+        params, state, m = opt.update(grads, state, params)
+        return params, state, loss, m["grad_norm"]
+
+    it = har.batches(train, args.batch, seed=0)
+    t0 = time.time()
+    for i in range(1, args.steps + 1):
+        bx, by = next(it)
+        params, state, loss, gn = step(params, state, jnp.asarray(bx),
+                                       jnp.asarray(by))
+        if i % 50 == 0 or i == 1:
+            acc = lstm.accuracy(params, jnp.asarray(test.x[:512]),
+                                jnp.asarray(test.y[:512]), cfg)
+            print(f"step {i:4d} loss {float(loss):.4f} "
+                  f"test_acc {float(acc):.1%} "
+                  f"({time.time() - t0:.0f}s)")
+
+    acc = lstm.accuracy(params, jnp.asarray(test.x), jnp.asarray(test.y),
+                        cfg)
+    print(f"\nfinal test accuracy: {float(acc):.2%}")
+
+    # --- paper §4.1 protocol: latency over 100 random test cases ----------
+    idx = np.random.default_rng(0).choice(len(test.y), 100, replace=False)
+    cases = jnp.asarray(test.x[idx])
+    plans = {
+        "sequential(fine)": jax.jit(lambda p, x: lstm.forward_sequential(
+            p, x, cfg)),
+        "wavefront(MobiRNN)": jax.jit(lambda p, x: lstm.forward_wavefront(
+            p, x, cfg)),
+    }
+    print("\nlatency for 100 test cases (paper Fig 4 protocol):")
+    for name, fn in plans.items():
+        fn(params, cases[:1])  # compile
+        t0 = time.perf_counter()
+        for j in range(100):
+            jax.block_until_ready(fn(params, cases[j:j + 1]))
+        dt = time.perf_counter() - t0
+        print(f"  {name:20s} {dt * 1e3:8.1f} ms total "
+              f"({dt * 10:.2f} ms/case)")
+
+
+if __name__ == "__main__":
+    main()

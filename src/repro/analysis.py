@@ -1,0 +1,411 @@
+"""Analytic model accounting + roofline-term derivation from compiled HLO.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 16 GiB HBM at
+819 GB/s, ~50 GB/s per ICI link (values from the assignment brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts
+# ---------------------------------------------------------------------------
+def _attn_params(cfg: ModelConfig) -> int:
+    d, hq, hkv, dh = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim)
+    n = d * hq * dh + 2 * d * hkv * dh + hq * dh * d
+    if cfg.qkv_bias:
+        n += hq * dh + 2 * hkv * dh
+    return n
+
+
+def _mlp_params(cfg: ModelConfig, d_ff: int) -> int:
+    mult = 3 if cfg.mlp_act == "swiglu" else 2
+    return mult * cfg.d_model * d_ff
+
+
+def _moe_params(cfg: ModelConfig, active: bool) -> int:
+    moe = cfg.moe
+    n_exp = moe.top_k if active else moe.n_experts
+    return (cfg.d_model * moe.n_experts            # router (always dense)
+            + n_exp * _mlp_params(cfg, moe.d_ff))
+
+
+def _rwkv_params(cfg: ModelConfig) -> int:
+    d, r = cfg.d_model, cfg.ssm.lora_rank
+    tmix = (5 * d * d                  # r,k,v,g,o projections
+            + d * 5 * 32 + 5 * 32 * d  # ddlerp lora
+            + d * r + r * d            # decay lora
+            + 7 * d)                   # mu vectors, w0, u, groupnorm
+    cmix = 2 * d * cfg.d_ff + d * d + 2 * d
+    return tmix + cmix
+
+
+def _mamba_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    ds = cfg.ssm.d_state
+    dr = math.ceil(d / 16)
+    return (d * 2 * di + cfg.ssm.d_conv * di + di
+            + di * (dr + 2 * ds) + dr * di + di
+            + di * ds + di + di * d)
+
+
+def param_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active-per-token) analytic parameter counts."""
+    total = active = 0
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            t = a = _attn_params(cfg)
+        elif cfg.ssm.kind == "rwkv6":
+            t = a = _rwkv_params(cfg)
+        else:
+            t = a = _mamba_params(cfg)
+        if cfg.ssm is None or cfg.ssm.kind != "rwkv6":
+            if cfg.layer_is_moe(i):
+                t += _moe_params(cfg, active=False)
+                a += _moe_params(cfg, active=True)
+            else:
+                t += _mlp_params(cfg, cfg.d_ff)
+                a += _mlp_params(cfg, cfg.d_ff)
+        total += t + 4 * cfg.d_model            # norms
+        active += a + 4 * cfg.d_model
+    emb = cfg.vocab * cfg.d_model * (cfg.n_codebooks or 1)
+    head = 0 if cfg.tie_embeddings else emb
+    extra = 0
+    if cfg.n_vis_tokens:  # vlm projector (2-layer mlp with biases)
+        extra = (cfg.vis_dim * cfg.d_model + cfg.d_model
+                 + cfg.d_model * cfg.d_model + cfg.d_model)
+    total += emb + head + extra
+    active += emb + head + extra
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens for training, 2·N_active·tokens for
+    inference (embedding lookups excluded from N per convention)."""
+    _, active = param_counts(cfg)
+    emb = cfg.vocab * cfg.d_model * (cfg.n_codebooks or 1)
+    n = active - emb
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch     # decode: per generated token
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-step cost model (itemized; the napkin-math backbone of §Perf)
+#
+# XLA's compiled.cost_analysis() counts while-loop bodies ONCE, so with
+# scan-over-layers (and scanned attention/ssm blocks) it reports ~one group's
+# flops.  We therefore derive the compute and memory roofline terms from this
+# analytic model and use the HLO numbers as a per-group cross-check
+# (EXPERIMENTS.md §Dry-run records both).
+# ---------------------------------------------------------------------------
+def _layer_flops(cfg: ModelConfig, i: int, T: float, s_att: float,
+                 decode: bool) -> float:
+    """Forward flops of layer i for T tokens; s_att = attended positions."""
+    d, ff = cfg.d_model, cfg.d_ff
+    fl = 0.0
+    kind = cfg.layer_kind(i)
+    if kind == "attn":
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        fl += 2 * T * d * (hq + 2 * hkv) * dh      # qkv proj
+        fl += 2 * T * hq * dh * d                  # out proj
+        fl += 4 * T * s_att * hq * dh              # QK^T + AV
+    elif cfg.ssm.kind == "rwkv6":
+        dh = cfg.ssm.head_dim
+        C = cfg.ssm.chunk if not decode else 1
+        fl += 2 * T * d * d * 5                    # r,k,v,g,o projections
+        fl += 2 * T * d * (cfg.ssm.lora_rank * 2 + 5 * 32 * 2)  # loras
+        fl += 4 * T * d * (C + dh)                 # wkv chunk math
+        fl += 2 * T * (2 * d * ff + d * d)         # channel-mix
+        return fl
+    else:  # mamba
+        di = cfg.ssm.expand * d
+        ds = cfg.ssm.d_state
+        dr = math.ceil(d / 16)
+        fl += 2 * T * d * 2 * di + 2 * T * di * (dr + 2 * ds)
+        fl += 2 * T * dr * di + 2 * cfg.ssm.d_conv * T * di
+        fl += 8 * T * di * ds                      # selective scan step math
+        fl += 2 * T * di * d
+    # mlp / moe half
+    mult = 3 if cfg.mlp_act == "swiglu" else 2
+    if cfg.layer_is_moe(i):
+        moe = cfg.moe
+        cf = 1.0 if decode else moe.capacity_factor
+        fl += 2 * T * d * moe.n_experts            # router
+        fl += 2 * mult * T * moe.top_k * cf * d * moe.d_ff
+    else:
+        fl += 2 * mult * T * d * ff
+    return fl
+
+
+def analytic_costs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, float]:
+    """Total flops and HBM bytes of one global step (all chips combined)."""
+    B, S = shape.global_batch, shape.seq_len
+    decode = shape.kind == "decode"
+    T = float(B if decode else B * S)
+    if decode:
+        window = cfg.sliding_window or 0
+        s_att = min(S, window) if window else S    # cache positions read
+    else:
+        # baseline chunked attention computes ALL kv blocks (masked), so the
+        # attended length is S, not S/2 — this waste is itself a §Perf lever
+        s_att = float(S)
+    fwd = sum(_layer_flops(cfg, i, T, s_att, decode)
+              for i in range(cfg.n_layers))
+    fwd += 2 * T * cfg.d_model * cfg.vocab * (cfg.n_codebooks or 1)  # head
+    # train: 1 fwd + 1 remat recompute + 2x bwd  = 4x forward flops
+    flops = fwd * (4.0 if shape.kind == "train" else 1.0)
+
+    # ---- bytes ----
+    p_total, _ = param_counts(cfg)
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    p_bytes = p_total * dt
+    act_unit = T * cfg.d_model * dt                # one activation tensor
+    if shape.kind == "train":
+        # params: read fwd + recompute + bwd, write once; adamw moments rw
+        byts = p_bytes * 4 + p_total * (4 + 4) * 2 * 2
+        byts += act_unit * 12 * cfg.n_layers       # activations r/w
+        byts += T * cfg.vocab * 4 * 3              # logits fwd+bwd
+    elif shape.kind == "prefill":
+        byts = p_bytes + act_unit * 8 * cfg.n_layers
+        byts += cache_bytes(cfg, B, S)             # cache write
+        byts += B * cfg.vocab * 4
+    else:
+        byts = p_bytes                              # weights stream once
+        byts += cache_bytes(cfg, B, S) * (1 + 1e-3)  # cache read (+tiny write)
+        byts += act_unit * 8 * cfg.n_layers
+        byts += B * cfg.vocab * 4
+    return {"flops": flops, "bytes": float(byts), "fwd_flops": fwd}
+
+
+def cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    """Decode-state bytes for a batch of B requests at context S."""
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    total = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            w = cfg.sliding_window or 0
+            s_c = min(S, w) if w else S
+            if cfg.kv_quant:   # int8 values + one f32 scale per (tok, head)
+                total += 2 * B * s_c * cfg.n_kv_heads * (
+                    cfg.resolved_head_dim * 1 + 4)
+            else:
+                total += (2 * B * s_c * cfg.n_kv_heads
+                          * cfg.resolved_head_dim * dt)
+        elif cfg.ssm.kind == "rwkv6":
+            H, dh = cfg.d_model // cfg.ssm.head_dim, cfg.ssm.head_dim
+            total += B * (H * dh * dh * 4 + 2 * cfg.d_model * dt)
+        else:
+            di = cfg.ssm.expand * cfg.d_model
+            total += B * (di * cfg.ssm.d_state * 4
+                          + (cfg.ssm.d_conv - 1) * di * dt)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Collective-bytes extraction from post-SPMD HLO text
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*[a-z0-9]+\[[^\]]*\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"\(")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Bytes of the result shape(s) on an HLO line (post-SPMD = per-device)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(line.split("=")[0] + "="):
+        pass
+    # result type is everything before the op name: parse the lhs annotation
+    lhs = line.split("=", 1)
+    if len(lhs) < 2:
+        return 0
+    rhs = lhs[1]
+    m = _SHAPE_RE.search(rhs)
+    if not m:
+        return 0
+    dtype, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str, kind: str) -> int:
+    rhs = line.split("=", 1)[1]
+    paren = rhs.index(kind)
+    result_part = rhs[:paren]
+    byts = 0
+    for sm in _SHAPE_RE.finditer(result_part):
+        n = 1
+        for d in sm.group(2).split(","):
+            if d:
+                n *= int(d)
+        byts += n * _DTYPE_BYTES.get(sm.group(1), 4)
+    return byts
+
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def parse_hlo_computations(hlo_text: str):
+    """Split post-SPMD HLO text into {computation: [instruction lines]} and
+    return (computations, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current = None
+    for raw in hlo_text.splitlines():
+        if raw and not raw[0].isspace() and "{" in raw:
+            m = _COMP_HEADER_RE.match(raw)
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+                continue
+        if raw.strip() == "}":
+            current = None
+        elif current is not None:
+            comps[current].append(raw.strip())
+    return comps, entry
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Trip count of a scan-style while: the bound constant in the condition
+    (lax.scan lowers to `compare(iter, constant(N)), direction=LT`)."""
+    best = 1
+    for line in cond_lines:
+        if "compare" in line or "constant" in line:
+            for m in _CONST_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device collective result bytes by type, SCALED BY LOOP TRIP
+    COUNTS (a collective inside a scanned-layer while body executes once per
+    trip; XLA's flat text lists it once)."""
+    comps, entry = parse_hlo_computations(hlo_text)
+    if entry is None:
+        return {}
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    # propagate multiplicities in call order (HLO computations are listed
+    # bottom-up; iterate to a fixpoint — call graphs are shallow)
+    for _ in range(len(comps)):
+        changed = False
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for name, lines in comps.items():
+            m = mult[name]
+            if not m:
+                continue
+            for line in lines:
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trips = _trip_count(comps.get(cond, []))
+                    new[body] = new.get(body, 0.0) + m * trips
+                    new[cond] = new.get(cond, 0.0) + m * (trips + 1)
+                    continue
+                for cm in _CALL_RE.finditer(line):
+                    callee = cm.group(1)
+                    if callee in comps:
+                        new[callee] = new.get(callee, 0.0) + m
+        if new != mult:
+            mult = new
+            changed = True
+        if not changed:
+            break
+
+    out: dict[str, int] = {}
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if not m:
+            continue
+        for line in lines:
+            cm = _COLLECTIVE_RE.search(line)
+            if cm:
+                kind = cm.group(1)
+                out[kind] = out.get(kind, 0) + int(_result_bytes(line, kind)
+                                                   * m)
+    return out
+
+
+# ring-cost multiplier: fraction of the result bytes that actually crosses a
+# link per chip for each collective type on an N-way ring
+def ici_seconds(coll: dict[str, int], n_shards: int = 16) -> float:
+    f = (n_shards - 1) / max(n_shards, 1)
+    mult = {"all-gather": f, "reduce-scatter": f, "all-reduce": 2 * f,
+            "all-to-all": f / 2, "collective-permute": 1.0}
+    return sum(mult.get(k, 1.0) * v for k, v in coll.items()) / ICI_BW
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # total HLO flops (all devices)
+    hbm_bytes: float             # total HLO bytes accessed (all devices)
+    coll_bytes: dict[str, int]   # per-device collective result bytes
+    n_chips: int
+    model_flops: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return ici_seconds(self.coll_bytes)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "hlo_flops": self.flops,
+            "hlo_bytes": self.hbm_bytes,
+            "collective_bytes": self.coll_bytes,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_frac": self.useful_flops_frac,
+        }

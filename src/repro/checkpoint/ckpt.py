@@ -1,0 +1,67 @@
+"""Checkpointing: flat-path npz snapshots with atomic rename.
+
+No orbax offline — this is a small, dependency-free implementation: pytrees
+are flattened to `path/to/leaf` keys, saved with np.savez, restored against
+a structural template (shape/dtype checked leaf by leaf).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, tree: Any, extra: dict | None = None
+         ) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp_ckpt_{step}.npz")
+    final = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    flat = _flatten(tree)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, final)
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template: Any, step: int | None = None) -> Any:
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for p, leaf in leaves_with_path:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(e)) for e in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch at {key}: ckpt {arr.shape} vs "
+                f"template {leaf.shape}")
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,48 @@
+"""Architecture registry: the 10 assigned architectures + the paper's LSTM."""
+from repro.configs.base import INPUT_SHAPES, ModelConfig, MoEConfig, SSMConfig, ShapeConfig
+from repro.configs import (
+    command_r_35b,
+    internvl2_1b,
+    jamba_1_5_large_398b,
+    mobirnn_lstm,
+    musicgen_large,
+    olmoe_1b_7b,
+    qwen2_0_5b,
+    qwen3_moe_30b_a3b,
+    rwkv6_3b,
+    stablelm_12b,
+    yi_9b,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        yi_9b.CONFIG,
+        jamba_1_5_large_398b.CONFIG,
+        qwen2_0_5b.CONFIG,
+        command_r_35b.CONFIG,
+        musicgen_large.CONFIG,
+        internvl2_1b.CONFIG,
+        stablelm_12b.CONFIG,
+        olmoe_1b_7b.CONFIG,
+        rwkv6_3b.CONFIG,
+        qwen3_moe_30b_a3b.CONFIG,
+    ]
+}
+
+MOBIRNN_LSTM = mobirnn_lstm.CONFIG
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name.endswith("-reduced"):
+        return ARCHS[name[: -len("-reduced")]].reduced()
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+__all__ = [
+    "ARCHS", "INPUT_SHAPES", "MOBIRNN_LSTM", "ModelConfig", "MoEConfig",
+    "SSMConfig", "ShapeConfig", "get_arch", "get_shape",
+]

@@ -1,0 +1,28 @@
+"""MusicGen-large — decoder-only transformer over EnCodec audio tokens
+[arXiv:2306.05284].
+
+Backbone only (per assignment): the EnCodec tokenizer/codec is a stub; the
+model consumes 4 parallel codebook token streams (delay pattern collapsed to
+sum-of-codebook-embeddings) and predicts all 4 codebooks per step via 4 heads.
+The original uses learned sinusoidal positions; we use RoPE (TPU-idiomatic,
+noted in DESIGN.md) — the decoder structure (MHA kv=32, GELU FFN, LN) is kept.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,            # full multi-head attention
+    d_ff=8192,
+    vocab=2048,               # EnCodec codebook size
+    head_dim=64,
+    qkv_bias=False,
+    mlp_act="gelu",
+    norm="ln",
+    rope_theta=10_000.0,
+    n_codebooks=4,
+    source="arXiv:2306.05284",
+)

@@ -1,0 +1,4 @@
+"""MobiRNN core: the paper's contribution as composable JAX modules."""
+from repro.core import cell, factorization, lstm, scheduler, state, wavefront
+
+__all__ = ["cell", "factorization", "lstm", "scheduler", "state", "wavefront"]

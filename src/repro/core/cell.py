@@ -1,0 +1,94 @@
+"""LSTM cell math — fused (MobiRNN-style) and fine-grained (desktop-CUDA-style).
+
+The paper's §3.1/§3.2 contrast two factorizations of one gate computation:
+
+* **CUDA-style (fine)**: the input vector is multiplied against each weight
+  column as an independent work unit (120 vector products -> 120 dispatches).
+  On a constrained accelerator the per-work-unit scheduling overhead dominates
+  and the GPU path is ~4x SLOWER than CPU (Fig 3).
+* **MobiRNN (coarse/fused)**: the four gate matmuls are combined into ONE
+  matmul against W_fused in R^{(d+h) x 4h} and the point-wise gate math is
+  fused behind it (Fig 2c) -> few large work units, 3.93x speedup (Fig 4).
+
+We implement both so the benchmark suite can reproduce the Fig 3 vs Fig 4
+contrast, and so tests can assert they are numerically identical.  The fused
+form is also what the Pallas kernel (kernels/lstm_cell.py) implements on TPU.
+
+Weight layout of the fused cell:  W in R^{(input_dim + hidden) x 4*hidden},
+gate order (i, f, g, o) — input, forget, candidate, output.  b in R^{4*hidden}
+(forget-gate bias initialised to +1.0, standard practice the paper inherits
+from TensorFlow's BasicLSTMCell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.partitioning import Annot
+
+
+def init_cell(key: jax.Array, input_dim: int, hidden: int,
+              dtype=jnp.float32) -> dict:
+    """Fused-cell parameters with logical sharding axes."""
+    kw, = jax.random.split(key, 1)
+    scale = (input_dim + hidden) ** -0.5
+    w = jax.random.truncated_normal(
+        kw, -2.0, 2.0, (input_dim + hidden, 4 * hidden), jnp.float32) * scale
+    b = jnp.zeros((4 * hidden,), jnp.float32)
+    # forget-gate bias = 1.0
+    b = b.at[hidden:2 * hidden].set(1.0)
+    return {
+        "w": Annot(w.astype(dtype), ("embed", "mlp")),
+        "b": Annot(b.astype(dtype), ("mlp",)),
+    }
+
+
+def lstm_cell_fused(params: dict, x: jax.Array, c: jax.Array, h: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """MobiRNN-style fused cell: one matmul on concat([x, h]), fused gates.
+
+    x: (..., input_dim); c, h: (..., hidden).  Returns (c', h').
+    """
+    hidden = c.shape[-1]
+    xh = jnp.concatenate([x, h], axis=-1)
+    gates = xh @ params["w"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    del hidden
+    return c_new, h_new
+
+
+def lstm_cell_fine(params: dict, x: jax.Array, c: jax.Array, h: jax.Array,
+                   unit_cols: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Desktop-CUDA-style fine-grained factorization of the same cell.
+
+    Emulates the paper's Fig 2b: the gate computation is split into
+    ``4*hidden / unit_cols`` independent column-block work units (one vector
+    product per weight column when unit_cols=1), each issued as a separate
+    XLA op, followed by unfused per-gate point-wise stages.  Numerically
+    identical to :func:`lstm_cell_fused`; the benchmark suite measures the
+    dispatch-overhead gap between the two.
+    """
+    hidden = c.shape[-1]
+    xh = jnp.concatenate([x, h], axis=-1)
+    w, b = params["w"], params["b"]
+    cols = []
+    for lo in range(0, 4 * hidden, unit_cols):
+        hi = min(lo + unit_cols, 4 * hidden)
+        # one small vector-matrix product per work unit
+        cols.append(xh @ jax.lax.slice_in_dim(w, lo, hi, axis=1))
+    gates = jnp.concatenate(cols, axis=-1) + b
+    # unfused point-wise stages, one gate at a time (no fusion across gates)
+    i = jax.nn.sigmoid(gates[..., 0 * hidden:1 * hidden])
+    f = jax.nn.sigmoid(gates[..., 1 * hidden:2 * hidden])
+    g = jnp.tanh(gates[..., 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(gates[..., 3 * hidden:4 * hidden])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return c_new, h_new
+
+
+def cell_flops(input_dim: int, hidden: int, batch: int = 1) -> int:
+    """Analytic FLOPs of one cell step (matmul-dominated)."""
+    return 2 * batch * (input_dim + hidden) * 4 * hidden

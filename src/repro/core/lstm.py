@@ -1,0 +1,121 @@
+"""The paper's model: stacked LSTM for activity recognition (MobiRNN §4.1).
+
+Three execution plans over the same parameters (all numerically equivalent,
+asserted by tests):
+
+* ``forward_sequential`` — reference plan: scan over time, layers unrolled
+  inside the step (the single-threaded baseline of Fig 3/4).
+* ``forward_wavefront`` — the paper's Fig 1 diagonal parallelism: cells on an
+  anti-diagonal (layer i, time t, i+t = const) execute together as ONE vmapped
+  cell call over layers (see core/wavefront.py).
+* ``forward_fused_kernel`` — sequential plan but each cell is the Pallas
+  fused-gate kernel (kernels/lstm_cell.py) instead of jnp ops.
+
+The classifier head follows Guan & Ploetz-style HAR models: last hidden state
+-> dense -> 6-way softmax.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mobirnn_lstm import LSTMConfig
+from repro.core import cell as cell_lib
+from repro.partitioning import Annot, split
+
+
+def init_params(key: jax.Array, cfg: LSTMConfig) -> dict:
+    """Annotated parameter tree for the stacked LSTM + HAR head."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    for i in range(cfg.n_layers):
+        in_dim = cfg.input_dim if i == 0 else cfg.hidden
+        layers.append(cell_lib.init_cell(keys[i], in_dim, cfg.hidden, dtype))
+    head_w = jax.random.truncated_normal(
+        keys[-1], -2.0, 2.0, (cfg.hidden, cfg.n_classes), jnp.float32
+    ) * cfg.hidden ** -0.5
+    return {
+        "layers": layers,
+        "head": {
+            "w": Annot(head_w.astype(dtype), ("embed", None)),
+            "b": Annot(jnp.zeros((cfg.n_classes,), dtype), (None,)),
+        },
+    }
+
+
+def init_state(cfg: LSTMConfig, batch: int, dtype=jnp.float32
+               ) -> tuple[jax.Array, jax.Array]:
+    """Preallocated (c, h) buffers, one pair per layer (paper §3.2: state
+    tensors are preallocated once and reused across the whole sequence)."""
+    shape = (cfg.n_layers, batch, cfg.hidden)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def _plain_params(params: dict) -> dict:
+    values, _ = split(params)
+    return values
+
+
+def forward_sequential(
+    params: dict, x: jax.Array, cfg: LSTMConfig,
+    cell_fn: Callable = cell_lib.lstm_cell_fused,
+) -> jax.Array:
+    """Reference plan.  x: (batch, seq, input_dim) -> logits (batch, classes).
+
+    Scan over time; within a step, layers run in dependency order.  The (c,h)
+    buffers are the scan carry — XLA keeps them in place (donated buffers),
+    realising the paper's preallocation/reuse optimization.
+    """
+    p = _plain_params(params)
+    batch = x.shape[0]
+    c0, h0 = init_state(cfg, batch, x.dtype)
+
+    def step(carry, x_t):
+        c, h = carry
+        inp = x_t
+        cs, hs = [], []
+        for i in range(cfg.n_layers):
+            c_i, h_i = cell_fn(p["layers"][i], inp, c[i], h[i])
+            cs.append(c_i)
+            hs.append(h_i)
+            inp = h_i
+        return (jnp.stack(cs), jnp.stack(hs)), None
+
+    (c, h), _ = jax.lax.scan(step, (c0, h0), jnp.swapaxes(x, 0, 1))
+    last = h[-1]
+    return last @ p["head"]["w"] + p["head"]["b"]
+
+
+def forward_fused_kernel(params: dict, x: jax.Array, cfg: LSTMConfig,
+                         interpret: bool = True) -> jax.Array:
+    """Sequential plan with the Pallas fused-cell kernel as the cell body."""
+    from repro.kernels import ops as kernel_ops
+
+    def cell_fn(p, inp, c, h):
+        return kernel_ops.lstm_cell(p["w"], p["b"], inp, c, h,
+                                    interpret=interpret)
+
+    return forward_sequential(params, x, cfg, cell_fn=cell_fn)
+
+
+def forward_wavefront(params: dict, x: jax.Array, cfg: LSTMConfig
+                      ) -> jax.Array:
+    """Paper Fig 1 diagonal plan — see core/wavefront.py."""
+    from repro.core import wavefront
+    return wavefront.forward_wavefront(params, x, cfg)
+
+
+def loss_fn(params: dict, x: jax.Array, labels: jax.Array, cfg: LSTMConfig,
+            forward: Callable = forward_sequential) -> jax.Array:
+    logits = forward(params, x, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(params: dict, x: jax.Array, labels: jax.Array, cfg: LSTMConfig,
+             forward: Callable = forward_sequential) -> jax.Array:
+    logits = forward(params, x, cfg)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,4 @@
+from repro.data.har import HARData, batches, make_har
+from repro.data.lm import SyntheticLM
+
+__all__ = ["HARData", "batches", "make_har", "SyntheticLM"]

@@ -1,0 +1,51 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Block sizes are chosen by core/factorization.choose_block (the MobiRNN
+coarse-factorization rule) unless explicitly overridden.  On this CPU-only
+container `interpret=True` executes the kernel bodies in Python for
+correctness validation; on TPU pass `interpret=False`.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import factorization
+from repro.kernels import decode_attn as _decode_attn
+from repro.kernels import lstm_cell as _lstm_cell
+from repro.kernels import wkv6 as _wkv6
+
+
+def lstm_cell(w: jax.Array, b: jax.Array, x: jax.Array, c: jax.Array,
+              h: jax.Array, *, interpret: bool = True,
+              block_b: int | None = None, block_h: int | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    B, H = c.shape
+    K = w.shape[0]
+    if block_b is None or block_h is None:
+        bm, bn, _ = factorization.choose_block(B, 4 * H, K)
+        block_b = block_b or bm
+        block_h = block_h or max(bn // 4, 1)
+    return _lstm_cell.lstm_cell(w, b, x, c, h, block_b=block_b,
+                                block_h=block_h, interpret=interpret)
+
+
+def wkv6(r, k, v, logw, u, state, *, chunk: int = 32,
+         interpret: bool = True):
+    return _wkv6.wkv6(r, k, v, logw, u, state, chunk=chunk,
+                      interpret=interpret)
+
+
+def decode_attn(q, k_cache, v_cache, lengths, *, scale=None,
+                block_s: int = 128, interpret: bool = True):
+    return _decode_attn.decode_attn(q, k_cache, v_cache, lengths,
+                                    scale=scale, block_s=block_s,
+                                    interpret=interpret)
+
+
+def flash_prefill(q, k, v, *, window: int = 0, scale=None,
+                  q_block: int = 128, k_block: int = 128,
+                  interpret: bool = True):
+    from repro.kernels import flash_prefill as _fp
+    return _fp.flash_prefill(q, k, v, window=window, scale=scale,
+                             q_block=q_block, k_block=k_block,
+                             interpret=interpret)

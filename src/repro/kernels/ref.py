@@ -1,0 +1,145 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function is the mathematical specification its kernel is tested against
+(tests/test_kernels_*.py sweep shapes/dtypes and assert_allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Fused LSTM cell (kernels/lstm_cell.py)
+# ---------------------------------------------------------------------------
+def lstm_cell(w: jax.Array, b: jax.Array, x: jax.Array, c: jax.Array,
+              h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """w: (D+H, 4H) gate order (i,f,g,o); x: (B,D); c,h: (B,H)."""
+    xh = jnp.concatenate([x, h], axis=-1)
+    gates = (xh.astype(jnp.float32) @ w.astype(jnp.float32)
+             + b.astype(jnp.float32))
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c32 = c.astype(jnp.float32)
+    c_new = jax.nn.sigmoid(f) * c32 + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return c_new.astype(c.dtype), h_new.astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 chunked wkv scan (kernels/wkv6.py)
+# ---------------------------------------------------------------------------
+def wkv6_chunk(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+               u: jax.Array, state: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """One chunk of the RWKV6 recurrence for one (batch, head).
+
+    r,k,logw: (C, dk); v: (C, dv); u: (dk,); state: (dk, dv).
+      S_t = diag(exp(logw_t)) S_{t-1} + k_t^T v_t
+      out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    Stable within-chunk parallel form using only non-positive exponents.
+    """
+    f32 = jnp.float32
+    r, k, v = r.astype(f32), k.astype(f32), v.astype(f32)
+    logw, u, state = logw.astype(f32), u.astype(f32), state.astype(f32)
+    C = r.shape[0]
+    L = jnp.cumsum(logw, axis=0)               # inclusive: L_i = sum_{j<=i}
+    L_prev = L - logw                          # exclusive: L_{i-1}
+    # carry term: r_i diag(exp(L_prev_i)) S
+    out = (r * jnp.exp(L_prev)) @ state        # (C, dv)
+    # intra-chunk term, j < i:  A[i,j,c] = exp(L_prev[i,c] - L[j,c])  (<= 0)
+    diff = L_prev[:, None, :] - L[None, :, :]  # (C, C, dk)
+    mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])
+    scores = jnp.einsum("ic,jc,ijc->ij", r, k, jnp.exp(diff)) * mask
+    out = out + scores @ v
+    # bonus (diagonal) term
+    out = out + jnp.einsum("ic,c,ic->i", r, u, k)[:, None] * v
+    # state update: S' = diag(exp(L_last)) S + sum_j diag(exp(L_last - L_j)) k_j^T v_j
+    L_last = L[-1]
+    decay_j = jnp.exp(L_last[None, :] - L)     # (C, dk), exponents <= 0
+    state_new = jnp.exp(L_last)[:, None] * state + (k * decay_j).T @ v
+    return out, state_new
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+         u: jax.Array, state: jax.Array, chunk: int
+         ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence oracle: scan wkv6_chunk over T/chunk chunks.
+
+    r,k,logw: (T, dk); v: (T, dv); state: (dk, dv).  T % chunk == 0.
+    """
+    T = r.shape[0]
+    n = T // chunk
+
+    def step(s, xs):
+        rc, kc, vc, wc = xs
+        out, s = wkv6_chunk(rc, kc, vc, wc, u, s)
+        return s, out
+
+    xs = (r.reshape(n, chunk, -1), k.reshape(n, chunk, -1),
+          v.reshape(n, chunk, -1), logw.reshape(n, chunk, -1))
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return outs.reshape(T, -1), state
+
+
+def wkv6_stepwise(r, k, v, logw, u, state):
+    """Per-timestep reference recurrence (the 'fine-grained' plan)."""
+    f32 = jnp.float32
+    r, k, v = r.astype(f32), k.astype(f32), v.astype(f32)
+    logw, u, state = logw.astype(f32), u.astype(f32), state.astype(f32)
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = jnp.outer(k_t, v_t)
+        out = r_t @ (s + u[:, None] * kv)
+        s = jnp.exp(w_t)[:, None] * s + kv
+        return s, out
+
+    state, outs = jax.lax.scan(step, state, (r, k, v, logw))
+    return outs, state
+
+
+# ---------------------------------------------------------------------------
+# Blocked causal prefill attention (kernels/flash_prefill.py)
+# ---------------------------------------------------------------------------
+def prefill_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                 window: int = 0, scale: float | None = None) -> jax.Array:
+    """Naive causal attention oracle.  q: (B,S,Hq,dh); k,v: (B,S,Hkv,dh)."""
+    B, S, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    scale = dh ** -0.5 if scale is None else scale
+    kr = jnp.repeat(k.astype(jnp.float32), group, axis=2)
+    vr = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr) * scale
+    pos = jnp.arange(S)
+    mask = pos[:, None] >= pos[None, :]
+    if window:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Single-token flash-decode attention (kernels/decode_attn.py)
+# ---------------------------------------------------------------------------
+def decode_attn(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                length: jax.Array | int, scale: float | None = None
+                ) -> jax.Array:
+    """q: (B, Hq, dk); caches: (B, S, Hkv, dk); length: valid cache length.
+
+    GQA: query head h reads kv head h // (Hq // Hkv).  Returns (B, Hq, dk).
+    """
+    B, S, Hkv, dk = k_cache.shape
+    Hq = q.shape[1]
+    scale = scale if scale is not None else dk ** -0.5
+    group = Hq // Hkv
+    kc = jnp.repeat(k_cache.astype(jnp.float32), group, axis=2)  # (B,S,Hq,dk)
+    vc = jnp.repeat(v_cache.astype(jnp.float32), group, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kc) * scale
+    valid = jnp.arange(S)[None, None, :] < jnp.asarray(length).reshape(-1, 1, 1)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vc)
+    return out.astype(q.dtype)

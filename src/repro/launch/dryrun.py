@@ -1,0 +1,244 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination against the production mesh and extract the roofline
+terms from the compiled artifact.
+
+For every combination this:
+  1. builds abstract (ShapeDtypeStruct) params / optimizer state / cache /
+     batch — nothing is ever allocated;
+  2. resolves shardings through the logical-axis rules (partitioning.py);
+  3. ``jax.jit(step, in_shardings=...).lower(...).compile()`` — a failure
+     here (sharding mismatch, unsupported collective) is a bug in the
+     framework, not an acceptable outcome;
+  4. records memory_analysis / cost_analysis / per-collective bytes and the
+     derived roofline terms to results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun                    # all missing combos
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh pod1
+"""
+from __future__ import annotations
+
+# The dry-run needs 512 placeholder devices so jax.make_mesh can build the
+# production mesh; jax locks the device count on first init, so this MUST
+# happen before ANY other import (including `from repro...`).
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import analysis, steps
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry, transformer
+from repro.optim import AdamW
+from repro.partitioning import make_rules, tree_shardings
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _batch_axes(cfg, shape, specs) -> dict:
+    """Logical axes for each batch input."""
+    sax = "seq_model" if cfg.seq_shard else "seq"
+    axes = {}
+    for name, s in specs.items():
+        if name == "vis_embeds":
+            axes[name] = ("batch", None, None)
+        elif cfg.n_codebooks and s.ndim >= 2:
+            axes[name] = ("batch", None, sax)[: s.ndim]
+        else:
+            axes[name] = ("batch", sax)[: s.ndim]
+    return axes
+
+
+def build_case(arch: str, shape_name: str, multi_pod: bool,
+               kv_quant: bool = False, data_axis: int = 16,
+               model_axis: int = 16):
+    """Returns (jitted_fn, abstract_args, meta) ready to lower."""
+    import dataclasses
+
+    shape = get_shape(shape_name)
+    cfg = registry.config_for_shape(get_arch(arch), shape)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    mesh = make_production_mesh(multi_pod=multi_pod, data=data_axis,
+                                model=model_axis)
+    # decode: no FSDP — re-gathering weight shards every token costs more
+    # ICI than the HBM they save; weights stay model-sharded + replicated
+    # over data (§Perf iteration B2)
+    overrides = {"embed": ()} if shape.kind == "decode" else None
+    rules = make_rules(mesh, overrides)
+
+    params_abs, params_axes = transformer.abstract_params(cfg)
+    p_shard = tree_shardings(params_axes, params_abs, rules)
+    specs = registry.input_specs(cfg, shape)
+    b_axes = _batch_axes(cfg, shape, specs)
+    b_shard = {k: rules.sharding_for(b_axes[k], s.shape)
+               for k, s in specs.items()}
+
+    if shape.kind == "train":
+        optimizer = AdamW(lr=3e-4)
+        opt_abs = jax.eval_shape(optimizer.init, params_abs)
+        o_shard = {"mu": p_shard, "nu": p_shard,
+                   "step": rules.sharding_for((), ())}
+
+        def fn(params, opt_state, batch):
+            return steps.train_step(optimizer, cfg, params, opt_state, batch)
+
+        jitted = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+        args = (params_abs, opt_abs, specs)
+    elif shape.kind == "prefill":
+        cache_abs, cache_axes = transformer.abstract_cache(
+            cfg, shape.global_batch, shape.seq_len)
+        c_shard = tree_shardings(cache_axes, cache_abs, rules)
+
+        def fn(params, cache, batch):
+            return steps.prefill_step(cfg, params, cache, batch)
+
+        jitted = jax.jit(fn, in_shardings=(p_shard, c_shard, b_shard),
+                         donate_argnums=(1,))
+        args = (params_abs, cache_abs, specs)
+    else:  # decode
+        cache_abs, cache_axes = transformer.abstract_cache(
+            cfg, shape.global_batch, shape.seq_len)
+        c_shard = tree_shardings(cache_axes, cache_abs, rules)
+
+        def fn(params, cache, batch):
+            return steps.decode_step(cfg, params, cache, batch)
+
+        jitted = jax.jit(fn, in_shardings=(p_shard, c_shard, b_shard),
+                         donate_argnums=(1,))
+        args = (params_abs, cache_abs, specs)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "pod2" if multi_pod else "pod1",
+            "n_chips": 512 if multi_pod else 256,
+            "kind": shape.kind}
+    return jitted, args, (cfg, shape, mesh, rules, meta)
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str) -> dict:
+    from repro import partitioning
+
+    t0 = time.time()
+    jitted, args, (cfg, shape, mesh, rules, meta) = build_case(
+        arch, shape_name, multi_pod)
+    with mesh, partitioning.use_rules(rules):
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = None
+        try:
+            ma = compiled.memory_analysis()
+            mem = {k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not implement it
+            mem = {"error": str(e)[:200]}
+
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            cost = {k: float(v) for k, v in ca.items()
+                    if isinstance(v, (int, float)) and (
+                        "flops" in k or "bytes" in k)}
+        except Exception as e:
+            cost = {"error": str(e)[:200]}
+
+        hlo = compiled.as_text()
+        coll = analysis.collective_bytes(hlo)
+
+    # compute/memory terms come from the analytic itemized model (XLA's
+    # cost_analysis counts while-loop bodies once — recorded as cross-check)
+    costs = analysis.analytic_costs(cfg, shape)
+    roof = analysis.Roofline(
+        flops=costs["flops"],
+        hbm_bytes=costs["bytes"],
+        coll_bytes=coll,
+        n_chips=meta["n_chips"],
+        model_flops=analysis.model_flops(cfg, shape),
+    )
+    rec = dict(meta)
+    rec.update(
+        ok=True,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory_analysis=mem,
+        cost_analysis_hlo=cost,
+        analytic=costs,
+        params=analysis.param_counts(cfg),
+        roofline=roof.to_dict(),
+        sliding_window=cfg.sliding_window,
+        hlo_bytes_text=len(hlo),
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{meta['mesh']}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "pod1", "pod2"])
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_DIR))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [args.mesh] if args.mesh else ["pod1", "pod2"]
+
+    failures = []
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                fname = os.path.join(args.out,
+                                     f"{arch}__{shape_name}__{mesh_name}.json")
+                if os.path.exists(fname) and not args.force:
+                    print(f"skip {arch} {shape_name} {mesh_name} (done)")
+                    continue
+                print(f"== {arch} {shape_name} {mesh_name} ...", flush=True)
+                try:
+                    rec = run_case(arch, shape_name, mesh_name == "pod2",
+                                   args.out)
+                    r = rec["roofline"]
+                    print(f"   ok lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"dominant={r['dominant']} "
+                          f"t=({r['t_compute_s']:.2e},"
+                          f"{r['t_memory_s']:.2e},"
+                          f"{r['t_collective_s']:.2e})s "
+                          f"useful={r['useful_flops_frac']:.2f}",
+                          flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mesh_name, str(e)))
+                    os.makedirs(args.out, exist_ok=True)
+                    with open(fname + ".fail", "w") as f:
+                        f.write(traceback.format_exc())
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_[:3])
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

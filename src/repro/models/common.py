@@ -1,0 +1,116 @@
+"""Shared model components: norms, RoPE, linear/embedding initializers.
+
+All initializers return ``Annot`` leaves (array + logical sharding axes);
+apply functions take plain arrays (after ``partitioning.split``).
+Numerically sensitive ops (norms, softmax, rope) compute in float32 and cast
+back to the model dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.partitioning import Annot
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(d: int, kind: str, dtype) -> dict:
+    p = {"scale": Annot(jnp.ones((d,), dtype), ("embed_nofsdp",))}
+    if kind == "ln":
+        p["bias"] = Annot(jnp.zeros((d,), dtype), ("embed_nofsdp",))
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-5
+               ) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if kind == "rms":
+        x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+        out = x32 * p["scale"].astype(jnp.float32)
+    elif kind == "ln":
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), -1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return out.astype(x.dtype)
+
+
+def init_groupnorm(n_groups: int, d: int, dtype) -> dict:
+    return {"scale": Annot(jnp.ones((d,), dtype), ("embed_nofsdp",)),
+            "bias": Annot(jnp.zeros((d,), dtype), ("embed_nofsdp",))}
+
+
+def apply_groupnorm(p: dict, x: jax.Array, n_groups: int, eps: float = 1e-5
+                    ) -> jax.Array:
+    """GroupNorm over the last dim split into n_groups (RWKV head-norm)."""
+    *lead, d = x.shape
+    x32 = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), -1, keepdims=True)
+    x32 = ((x32 - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    out = x32 * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+def init_linear(key, d_in: int, d_out: int, axes: tuple, dtype,
+                bias: bool = False, bias_axes: tuple | None = None,
+                scale: float | None = None) -> dict:
+    s = (scale if scale is not None else d_in ** -0.5)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                    jnp.float32) * s
+    p = {"w": Annot(w.astype(dtype), axes)}
+    if bias:
+        p["b"] = Annot(jnp.zeros((d_out,), dtype),
+                       bias_axes if bias_axes is not None else (axes[-1],))
+    return p
+
+
+def apply_linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Annot:
+    e = jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32)
+    return Annot((e * d ** -0.5).astype(dtype), ("vocab", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (...,S,1,dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : dh // 2], x32[..., dh // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)

@@ -1,0 +1,142 @@
+"""Mamba (S6 selective SSM) block — the SSM half of the jamba hybrid.
+
+Train/prefill runs a ``lax.scan`` over time chunks with a per-step inner
+recurrence (the state (B, d_inner, d_state) is the carry — preallocated and
+reused, never re-materialised per step).  Decode is a single-step update over
+the cached (conv window, ssm state).
+
+Per-(channel, state) data-dependent decay exp(dt * A) means the matmul-form
+chunking used for RWKV6 does not apply (the (C,C) kernel would be per
+(channel x state) — see DESIGN.md); the per-step scan is the faithful
+Mamba-1 recurrence.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.partitioning import Annot
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def _w(key, shape, axes, scale, dtype):
+    return Annot((jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32) * scale
+                  ).astype(dtype), axes)
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, ds, dc, dr = d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv, dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    f32 = jnp.float32
+    # S4D-real initialisation of A; dt bias initialised for softplus in
+    # [1e-3, 1e-1] (standard mamba init)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=f32)[None, :], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[4], (di,), f32)
+                      * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))  # inverse softplus
+    return {
+        "in_proj": _w(ks[0], (d, 2 * di), ("embed", "mlp"), d ** -0.5, dtype),
+        "conv_w": _w(ks[1], (dc, di), (None, "mlp"), dc ** -0.5, dtype),
+        "conv_b": Annot(jnp.zeros((di,), dtype), ("mlp",)),
+        "x_proj": _w(ks[2], (di, dr + 2 * ds), ("mlp", None), di ** -0.5, dtype),
+        "dt_proj": _w(ks[3], (dr, di), (None, "mlp"), dr ** -0.5, f32),
+        "dt_bias": Annot(dt_bias, ("mlp",)),
+        "a_log": Annot(jnp.log(a), ("mlp", None)),
+        "d_skip": Annot(jnp.ones((di,), f32), ("mlp",)),
+        "out_proj": _w(ks[5], (di, d), ("mlp", "embed"), di ** -0.5, dtype),
+    }
+
+
+def _conv_causal(p: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq.  x: (B,S,di); x_prev: (B,dc-1,di)
+    carry window from the previous segment."""
+    dc = p["conv_w"].shape[0]
+    xp = jnp.concatenate([x_prev.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(dc):
+        # tap i reads position t - (dc-1-i)
+        out = out + xp[:, i:i + x.shape[1]] * p["conv_w"][i]
+    return out + p["conv_b"]
+
+
+def _ssm_params(p: dict, cfg: ModelConfig, xc: jax.Array):
+    """dt (B,S,di) f32, B/C matrices (B,S,ds) f32 from conv output."""
+    dr, ds = dt_rank(cfg), cfg.ssm.d_state
+    proj = xc @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dr].astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])
+    b_mat = proj[..., dr:dr + ds].astype(jnp.float32)
+    c_mat = proj[..., dr + ds:].astype(jnp.float32)
+    return dt, b_mat, c_mat
+
+
+def _scan(p: dict, xc: jax.Array, dt, b_mat, c_mat, h0: jax.Array):
+    """Selective scan.  xc: (B,S,di); h0: (B,di,ds) f32."""
+    a = -jnp.exp(p["a_log"])                         # (di, ds)
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs                     # (B,di),(B,di),(B,ds)x2
+        decay = jnp.exp(dt_t[..., None] * a)         # (B,di,ds)
+        dbx = (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        h = decay * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.swapaxes(xc, 0, 1), jnp.swapaxes(dt, 0, 1),
+          jnp.swapaxes(b_mat, 0, 1), jnp.swapaxes(c_mat, 0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.swapaxes(ys, 0, 1)                        # (B,S,di)
+    return y + xc.astype(jnp.float32) * p["d_skip"], h
+
+
+def scan_summary(p: dict, dt: jax.Array, b_mat: jax.Array
+                 ) -> jax.Array:
+    """Affine summary of a scan segment: the selective-scan update
+    h' = exp(dt⊙A) h + dt·x·B is affine in h, so a segment composes as
+    (D_seg, A_seg) with D_seg = exp(Σ_t dt_t ⊙ A) and A_seg = the
+    scan-from-zero final state.  This is the primitive that distributes the
+    Mamba recurrence across sequence shards exactly like the RWKV wkv
+    pipeline (EXPERIMENTS.md §Perf iteration E); validated in
+    tests/test_mamba_affine.py."""
+    a = -jnp.exp(p["a_log"])                              # (di, ds)
+    return jnp.exp(jnp.sum(dt, axis=1)[..., None] * a)    # (B, di, ds)
+
+
+def compose_affine(d1, a1, d2, a2):
+    """(D2,A2)∘(D1,A1): apply segment 1 then segment 2."""
+    return d2 * d1, d2 * a1 + a2
+
+
+def apply_mamba(p: dict, cfg: ModelConfig, x: jax.Array, conv_state, h_state
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence mamba.  x: (B,S,d).  Returns (out, conv', h')."""
+    di = d_inner(cfg)
+    xz = x @ p["in_proj"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    xc = jax.nn.silu(_conv_causal(p, x_in, conv_state))
+    dt, b_mat, c_mat = _ssm_params(p, cfg, xc)
+    y, h = _scan(p, xc, dt, b_mat, c_mat, h_state.astype(jnp.float32))
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    dc = cfg.ssm.d_conv
+    conv_new = jnp.concatenate([conv_state.astype(x_in.dtype),
+                                x_in], axis=1)[:, -(dc - 1):]
+    return out, conv_new, h
+
+
+def step_mamba(p: dict, cfg: ModelConfig, x: jax.Array, conv_state, h_state
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token mamba.  x: (B,1,d); conv_state: (B,dc-1,di);
+    h_state: (B,di,ds)."""
+    return apply_mamba(p, cfg, x, conv_state, h_state)

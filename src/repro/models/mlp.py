@@ -1,0 +1,39 @@
+"""Dense MLP blocks (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.partitioning import Annot
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+
+    def w(k, shape, axes, scale):
+        return Annot((jax.random.truncated_normal(k, -2.0, 2.0, shape,
+                                                  jnp.float32) * scale
+                      ).astype(dtype), axes)
+
+    if cfg.mlp_act == "swiglu":
+        return {
+            "wg": w(ks[0], (d, ff), ("embed", "mlp"), d ** -0.5),
+            "wu": w(ks[1], (d, ff), ("embed", "mlp"), d ** -0.5),
+            "wd": w(ks[2], (ff, d), ("mlp", "embed"), ff ** -0.5),
+        }
+    return {
+        "wi": w(ks[0], (d, ff), ("embed", "mlp"), d ** -0.5),
+        "wd": w(ks[2], (ff, d), ("mlp", "embed"), ff ** -0.5),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    else:
+        h = common.gelu(x @ p["wi"])
+    return h @ p["wd"]

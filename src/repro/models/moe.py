@@ -1,0 +1,236 @@
+"""Top-k mixture-of-experts with capacity-based dense dispatch.
+
+Dispatch algorithm (sort-free, SPMD-friendly — no ragged shapes):
+  1. router: softmax(x @ Wr) -> top-k (expert ids, weights) per token
+  2. position-in-expert via masked cumsum over the flattened (token, k) slots
+  3. scatter token vectors into a preallocated (E, C, D) expert buffer
+     (C = capacity; slots beyond capacity are DROPPED, standard GShard rule)
+  4. batched expert matmuls (E, C, D) x (E, D, F) — experts shard over the
+     'model' mesh axis (expert parallelism; XLA inserts the all-to-all class
+     collectives for the scatter/gather across expert shards)
+  5. gather back and combine with router weights
+
+The capacity factor is the MoE instance of MobiRNN's work-unit coarsening:
+it trades wasted padding slots (coarse, uniform work units the accelerator
+likes) against token drops — benchmarked in the perf log.
+
+Aux losses: switch-style load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.partitioning import Annot, constrain
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    moe = cfg.moe
+    d, e, ff = cfg.d_model, moe.n_experts, moe.d_ff
+    ks = jax.random.split(key, 4)
+
+    def w(k, shape, axes, scale):
+        return Annot((jax.random.truncated_normal(k, -2.0, 2.0, shape,
+                                                  jnp.float32) * scale
+                      ).astype(dtype), axes)
+
+    p = {
+        # router is tiny and every shard routes locally: keep it replicated
+        "router": w(ks[0], (d, e), ("embed_nofsdp", None), d ** -0.5),
+        "wd": w(ks[3], (e, ff, d), ("experts", "mlp", None), ff ** -0.5),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["wg"] = w(ks[1], (e, d, ff), ("experts", None, "mlp"), d ** -0.5)
+        p["wu"] = w(ks[2], (e, d, ff), ("experts", None, "mlp"), d ** -0.5)
+    else:
+        p["wi"] = w(ks[1], (e, d, ff), ("experts", None, "mlp"), d ** -0.5)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    moe = cfg.moe
+    c = int(moe.capacity_factor * n_tokens * moe.top_k / moe.n_experts)
+    return max(c, moe.top_k)
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              no_drop: bool = False) -> tuple[jax.Array, dict]:
+    """x: (..., d) -> (same shape, aux dict with load-balance losses).
+
+    no_drop=True sets capacity to T (a token appears at most once per
+    expert), guaranteeing zero drops — used by the inference paths so that
+    decode == forward exactly; training keeps the capacity-factor bound
+    (GShard rule).
+
+    Under an active sharding-rules context with a >1 'model' mesh axis the
+    expert-parallel shard_map path is used (see _apply_moe_ep); otherwise
+    the single-device dense-dispatch path below runs.
+    """
+    from repro import partitioning as pt
+
+    if pt._ACTIVE_RULES:
+        rules = pt._ACTIVE_RULES[-1]
+        m = rules.mesh.shape.get("model", 1)
+        if m > 1 and cfg.moe.n_experts % m == 0 and x.ndim == 3:
+            return _apply_moe_ep(p, x, cfg, rules, no_drop)
+    return _apply_moe_dense(p, x, cfg, no_drop)
+
+
+def _apply_moe_dense(p: dict, x: jax.Array, cfg: ModelConfig,
+                     no_drop: bool) -> tuple[jax.Array, dict]:
+    moe = cfg.moe
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    E, K = moe.n_experts, moe.top_k
+    C = T if no_drop else capacity(T, cfg)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                   # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)   # renormalise
+
+    # --- position-in-expert over flattened (T*K,) slots ------------------
+    flat_e = top_e.reshape(-1)                               # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot           # before me
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                # (T*K,)
+    keep = pos < C
+    dst_e = jnp.where(keep, flat_e, E)                       # drop -> row E
+    dst_c = jnp.where(keep, pos, 0)
+
+    # --- scatter to (E+1, C, D); row E is the drop bin -------------------
+    xk = jnp.repeat(xt, K, axis=0)                           # (T*K, D)
+    buf = jnp.zeros((E + 1, C, d), xt.dtype)
+    buf = buf.at[dst_e, dst_c].set(xk, mode="drop")
+    expert_in = constrain(buf[:E], ("experts", None, None))  # (E, C, D)
+
+    # --- expert computation (batched over experts) -----------------------
+    if "wg" in p:
+        h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["wg"]))
+             * jnp.einsum("ecd,edf->ecf", expert_in, p["wu"]))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", expert_in, p["wi"]),
+                        approximate=True)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wd"])      # (E, C, D)
+
+    # --- gather back and combine -----------------------------------------
+    out_k = expert_out[dst_e % E, dst_c]                     # (T*K, D)
+    out_k = out_k * (keep[:, None].astype(out_k.dtype))
+    out_k = out_k * top_p.reshape(-1)[:, None].astype(out_k.dtype)
+    out = jnp.sum(out_k.reshape(T, K, d), axis=1)
+    if len(orig_shape) == 3:
+        out = constrain(out.reshape(orig_shape), ("batch", "seq", None)
+                        ).reshape(T, d)
+
+    # --- aux losses (switch-transformer style) ----------------------------
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    load_balance = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"moe_load_balance": load_balance, "moe_z_loss": z_loss,
+           "moe_drop_frac": dropped}
+    return out.reshape(orig_shape).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel shard_map path.
+#
+# Layout: token activations are batch-sharded over ('pod','data') and
+# REPLICATED over 'model'; expert weights are sharded over 'model'
+# (E_loc = E/model experts per device).  Every device routes its local
+# tokens, scatters the slice destined to ITS experts into a local
+# (E_loc, C, D) buffer (zero cross-device traffic for dispatch — the tokens
+# are already resident), runs its expert matmuls, and the partial outputs
+# are combined with ONE psum over 'model' per MoE layer.
+#
+# This replaces the XLA-SPMD-derived schedule for the dense-dispatch
+# formulation, which replicated the full (T*k, D) dispatch buffer to every
+# device (observed: ~9.9 TB/device/step for qwen3-30b prefill_32k — see
+# EXPERIMENTS.md §Perf iteration A1).  Capacity is enforced per data shard
+# (C = cf*T_loc*k/E), the standard deployment rule.
+# ---------------------------------------------------------------------------
+def _apply_moe_ep(p: dict, x: jax.Array, cfg: ModelConfig, rules,
+                  no_drop: bool) -> tuple[jax.Array, dict]:
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    moe = cfg.moe
+    E = moe.n_experts
+    m_size = mesh.shape["model"]
+    E_loc = E // m_size
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    x_spec = rules.spec_for(("batch", "seq", None), x.shape)
+    w_spec = P("model", None, None)
+    p_specs = {k: (P() if k == "router" else w_spec) for k in p}
+    aux_spec = {"moe_load_balance": P(), "moe_z_loss": P(),
+                "moe_drop_frac": P()}
+
+    def local_fn(x_loc, p_loc):
+        B, S, d = x_loc.shape
+        xt = x_loc.reshape(-1, d)
+        T = xt.shape[0]
+        K = moe.top_k
+        C = T if no_drop else capacity(T, cfg)
+
+        logits = (xt @ p_loc["router"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, K)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        lo = jax.lax.axis_index("model") * E_loc
+        flat_e = top_e.reshape(-1)
+        is_local = (flat_e >= lo) & (flat_e < lo + E_loc)
+        local_e = jnp.where(is_local, flat_e - lo, E_loc)
+        onehot = jax.nn.one_hot(local_e, E_loc, dtype=jnp.int32)
+        pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, -1)
+        kept = is_local & (pos < C)
+        dst_e = jnp.where(kept, local_e, E_loc)
+        dst_c = jnp.where(kept, pos, 0)
+
+        xk = jnp.repeat(xt, K, axis=0)
+        buf = jnp.zeros((E_loc + 1, C, d), xt.dtype)
+        buf = buf.at[dst_e, dst_c].set(xk, mode="drop")
+        ein = buf[:E_loc]
+        if "wg" in p_loc:
+            h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", ein, p_loc["wg"]))
+                 * jnp.einsum("ecd,edf->ecf", ein, p_loc["wu"]))
+        else:
+            h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", ein, p_loc["wi"]),
+                            approximate=True)
+        eout = jnp.einsum("ecf,efd->ecd", h, p_loc["wd"])
+
+        out_k = eout[jnp.minimum(dst_e, E_loc - 1), dst_c]
+        out_k = out_k * kept[:, None].astype(out_k.dtype)
+        out_k = out_k * top_p.reshape(-1)[:, None].astype(out_k.dtype)
+        partial = jnp.sum(out_k.reshape(T, K, d), axis=1)
+        # pin the combine to the model dtype: the barrier stops XLA hoisting
+        # the downstream f32 convert above the all-reduce (2x ICI bytes)
+        partial = jax.lax.optimization_barrier(
+            partial.astype(x_loc.dtype))
+        out = jax.lax.psum(partial, "model")            # combine experts
+
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32),
+                      axis=0)
+        aux = {
+            "moe_load_balance": E * jnp.sum(me * ce),
+            "moe_z_loss": jnp.mean(
+                jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+            "moe_drop_frac": jax.lax.psum(
+                jnp.sum(is_local & ~kept).astype(jnp.float32), "model")
+            / (T * K),
+        }
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return out.reshape(B, S, d).astype(x_loc.dtype), aux
+
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(x_spec, p_specs),
+                       out_specs=(x_spec, aux_spec),
+                       check_vma=False)
+    return fn(x, p)

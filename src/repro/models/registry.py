@@ -1,0 +1,110 @@
+"""Model registry: build models and input specs from an architecture name.
+
+``input_specs`` is the single source of truth for what every (arch x shape)
+combination consumes — used identically by smoke tests (materialised) and
+the multi-pod dry-run (ShapeDtypeStructs, never allocated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+
+# dense archs get a ring-buffer sliding window for the 500k decode shape
+LONG_CONTEXT_WINDOW = 8192
+
+
+def config_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Shape-specific config adjustments (DESIGN.md §5): full attention at
+    524288 decode is replaced by the sliding-window variant for archs with
+    no sub-quadratic path of their own (dense/vlm/audio/moe); ssm/hybrid run
+    natively."""
+    needs_window = (shape.seq_len >= 262_144 and not cfg.attention_free
+                    and cfg.attn_every == 0)
+    if needs_window and not cfg.sliding_window:
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    emb_dtype = jnp.dtype(cfg.dtype)
+
+    def tok_struct(*s):
+        return jax.ShapeDtypeStruct(s, i32)
+
+    if shape.kind == "decode":
+        if cfg.n_codebooks:
+            return {"tokens": tok_struct(B, cfg.n_codebooks)}
+        return {"tokens": tok_struct(B)}
+
+    specs: dict[str, Any] = {}
+    if cfg.n_codebooks:
+        specs["tokens"] = tok_struct(B, cfg.n_codebooks, S)
+    elif cfg.n_vis_tokens:
+        specs["tokens"] = tok_struct(B, S - cfg.n_vis_tokens)
+        specs["vis_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vis_tokens, cfg.vis_dim), emb_dtype)
+    else:
+        specs["tokens"] = tok_struct(B, S)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(specs["tokens"].shape, i32)
+    return specs
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array
+               ) -> dict[str, jax.Array]:
+    """Materialise a random batch matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        k, key = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab, s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32
+                                          ).astype(s.dtype)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key):
+        return transformer.init_params(self.cfg, key)
+
+    def abstract_params(self, key=None):
+        return transformer.abstract_params(self.cfg, key)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return transformer.init_cache(self.cfg, batch, max_seq)
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return transformer.abstract_cache(self.cfg, batch, max_seq)
+
+    def forward(self, params, batch, remat: bool = False,
+                inference: bool = False):
+        return transformer.forward(params, self.cfg, batch, remat=remat,
+                                   inference=inference)
+
+    def prefill(self, params, cache, batch):
+        return transformer.prefill(params, self.cfg, cache, batch)
+
+    def decode_step(self, params, cache, batch):
+        return transformer.decode_step(params, self.cfg, cache, batch)
+
+
+def build(arch: str | ModelConfig, shape: ShapeConfig | None = None) -> Model:
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    if shape is not None:
+        cfg = config_for_shape(cfg, shape)
+    return Model(cfg)

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, warmup_cosine
+
+__all__ = ["AdamW", "warmup_cosine"]

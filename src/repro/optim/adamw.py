@@ -1,0 +1,72 @@
+"""AdamW with decoupled weight decay and fp32 moments (built from scratch —
+no optax in this environment).  Moments are fp32 regardless of param dtype;
+the update is computed in fp32 and cast back."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+    def init(self, params: Any) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads: Any, state: dict, params: Any
+               ) -> tuple[Any, dict, dict]:
+        """Returns (new_params, new_state, metrics)."""
+        step = state["step"] + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(g32)))
+        if self.grad_clip:
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state["mu"], g32)
+        nu = jax.tree.map(lambda n, g: self.b2 * n + (1 - self.b2) * g * g,
+                          state["nu"], g32)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, n):
+            u = (m / bc1) / (jnp.sqrt(n / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}, {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

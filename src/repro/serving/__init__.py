@@ -1,0 +1,3 @@
+from repro.serving.engine import Engine, Request, Result
+
+__all__ = ["Engine", "Request", "Result"]

@@ -1,0 +1,75 @@
+"""Step functions shared by training, serving, smoke tests and the dry-run.
+
+All functions take PLAIN pytrees (post ``partitioning.split``); sharding is
+applied by the callers via in_shardings/out_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean cross-entropy; logits (..., V) fp32, targets (...) int."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def loss_fn(params: Any, cfg: ModelConfig, batch: dict, *,
+            remat: bool = True) -> tuple[jax.Array, dict]:
+    logits, aux = transformer.forward(params, cfg, batch, remat=remat)
+    toks = batch["tokens"]
+    if cfg.n_codebooks:
+        # logits (B,K,S,V): every codebook predicts its own next token
+        loss = _xent(logits[:, :, :-1], toks[:, :, 1:])
+    elif cfg.n_vis_tokens:
+        # layout [vis | text]: position n_vis-1+i predicts text token i
+        nv = cfg.n_vis_tokens
+        loss = _xent(logits[:, nv - 1:-1], toks)
+    else:
+        loss = _xent(logits[:, :-1], toks[:, 1:])
+    metrics = {"xent": loss}
+    if cfg.moe is not None:
+        n_moe = sum(cfg.layer_is_moe(i) for i in range(cfg.n_layers))
+        lb = aux["moe_load_balance"] / max(n_moe, 1)
+        zl = aux["moe_z_loss"] / max(n_moe, 1)
+        loss = loss + cfg.moe.router_aux_weight * (lb + 0.1 * zl)
+        metrics.update(moe_load_balance=lb, moe_z_loss=zl,
+                       moe_drop_frac=aux["moe_drop_frac"] / max(n_moe, 1))
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def train_step(optimizer, cfg: ModelConfig, params: Any, opt_state: dict,
+               batch: dict) -> tuple[Any, dict, dict]:
+    (loss, metrics), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, cfg, batch)
+    params, opt_state, opt_metrics = optimizer.update(grads, opt_state,
+                                                      params)
+    metrics.update(opt_metrics)
+    return params, opt_state, metrics
+
+
+def eval_step(cfg: ModelConfig, params: Any, batch: dict) -> dict:
+    loss, metrics = loss_fn(params, cfg, batch, remat=False)
+    return metrics
+
+
+def prefill_step(cfg: ModelConfig, params: Any, cache: Any, batch: dict
+                 ) -> tuple[jax.Array, Any]:
+    return transformer.prefill(params, cfg, cache, batch)
+
+
+def decode_step(cfg: ModelConfig, params: Any, cache: Any, batch: dict
+                ) -> tuple[jax.Array, Any]:
+    return transformer.decode_step(params, cfg, cache, batch)
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the single real device; only launch/dryrun.py forces
+# the 512-device placeholder topology.
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,93 @@
+"""Roofline accounting: analytic param counts vs real trees; HLO collective
+parser on synthetic HLO."""
+import jax
+import pytest
+
+from repro import analysis
+from repro.configs import ARCHS, INPUT_SHAPES
+from repro.models import registry
+from repro.partitioning import param_count, split
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_analytic_param_count_matches_real_tree(name):
+    """The analytic formula must agree with the materialised reduced model
+    (within 2% — norms/scalars accounting tolerance)."""
+    cfg = ARCHS[name].reduced()
+    m = registry.build(cfg)
+    params, _ = split(m.init(jax.random.PRNGKey(0)))
+    real = param_count(params)
+    approx, active = analysis.param_counts(cfg)
+    assert abs(approx - real) / real < 0.02, (approx, real)
+    assert active <= approx
+
+
+def test_active_params_below_total_for_moe():
+    total, active = analysis.param_counts(ARCHS["qwen3-moe-30b-a3b"])
+    assert active < total / 4      # 8 of 128 experts per token
+
+
+def test_full_scale_param_counts_sane():
+    """Sanity against the published model sizes (within ~20%)."""
+    expect = {"yi-9b": 8.8e9, "command-r-35b": 35e9, "qwen2-0.5b": 0.5e9,
+              "olmoe-1b-7b": 6.9e9, "qwen3-moe-30b-a3b": 30e9,
+              "rwkv6-3b": 3.1e9, "jamba-1.5-large-398b": 398e9,
+              "stablelm-12b": 12e9, "musicgen-large": 3.3e9}
+    for name, target in expect.items():
+        total, _ = analysis.param_counts(ARCHS[name])
+        assert 0.7 < total / target < 1.45, (name, total, target)
+
+
+def test_model_flops_scaling():
+    cfg = ARCHS["yi-9b"]
+    tr = analysis.model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = analysis.model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    dc = analysis.model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr == pytest.approx(3 * pf, rel=1e-6)    # 6N vs 2N, same tokens
+    assert dc < pf / 1000                           # one token vs 32k
+
+
+def test_analytic_costs_decode_memory_dominated():
+    """Decode at 32k context must be memory-bound (cache streaming) for a
+    dense arch — the classic serving roofline."""
+    cfg = ARCHS["yi-9b"]
+    costs = analysis.analytic_costs(cfg, INPUT_SHAPES["decode_32k"])
+    t_comp = costs["flops"] / (256 * analysis.PEAK_FLOPS)
+    t_mem = costs["bytes"] / (256 * analysis.HBM_BW)
+    assert t_mem > t_comp
+
+
+SAMPLE_HLO = """
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+%body.2 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ar = f32[128,256]{1,0} all-reduce(%x), channel_id=1, to_apply=%add.1
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %ar)
+}
+%cond.3 (p: (s32[], f32[128,256])) -> pred[] {
+  %c = s32[] constant(24)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main.4 (p0: f32[128,256]) -> f32[128,256] {
+  %ag = bf16[64,512]{1,0} all-gather(%p0), channel_id=2
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond.3, body=%body.2
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_scales_by_trip_count():
+    coll = analysis.collective_bytes(SAMPLE_HLO)
+    assert coll["all-reduce"] == 24 * 128 * 256 * 4
+    assert coll["all-gather"] == 64 * 512 * 2
+
+
+def test_roofline_dominant_term():
+    r = analysis.Roofline(flops=1e18, hbm_bytes=1e9, coll_bytes={},
+                          n_chips=256, model_flops=5e17)
+    assert r.dominant == "compute"
+    assert 0.4 < r.useful_flops_frac < 0.6
+    r2 = analysis.Roofline(flops=1e12, hbm_bytes=1e15, coll_bytes={},
+                           n_chips=256, model_flops=1e12)
+    assert r2.dominant == "memory"

@@ -1,0 +1,100 @@
+"""Integration invariant: prefill + step-by-step decode reproduces the
+full-sequence forward logits for EVERY architecture family (the recurrent
+state handling, KV caches, ring buffers and MoE no-drop dispatch all have to
+be right simultaneously for this to hold)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.models import registry
+from repro.partitioning import split
+
+SHAPE = ShapeConfig("smoke", 33, 2, "train")
+PREFIX, EXTRA = 16, 2
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+def _setup(name, **cfg_overrides):
+    cfg = ARCHS[name].reduced()
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    m = registry.build(cfg)
+    params, _ = split(m.init(jax.random.PRNGKey(0)))
+    batch = registry.make_batch(cfg, SHAPE, jax.random.PRNGKey(1))
+    return cfg, m, params, batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_equals_forward(name):
+    cfg, m, params, batch = _setup(name)
+    toks = batch["tokens"]
+    cache, _ = split(m.init_cache(2, 64))
+    if cfg.n_codebooks:
+        pre = {"tokens": toks[:, :, :PREFIX]}
+        full = {"tokens": toks[:, :, :PREFIX + EXTRA]}
+    elif cfg.n_vis_tokens:
+        pre = {"tokens": toks[:, :PREFIX], "vis_embeds": batch["vis_embeds"]}
+        full = {"tokens": toks[:, :PREFIX + EXTRA],
+                "vis_embeds": batch["vis_embeds"]}
+    else:
+        pre = {"tokens": toks[:, :PREFIX]}
+        full = {"tokens": toks[:, :PREFIX + EXTRA]}
+    fl, _ = m.forward(params, full, inference=True)
+    pl, cache = m.prefill(params, cache, pre)
+    off = cfg.n_vis_tokens
+    if cfg.n_codebooks:
+        np.testing.assert_allclose(pl[:, :, 0], fl[:, :, PREFIX - 1], **TOL)
+        for t in range(EXTRA):
+            d, cache = m.decode_step(params, cache,
+                                     {"tokens": toks[:, :, PREFIX + t]})
+            np.testing.assert_allclose(d, fl[:, :, PREFIX + t], **TOL)
+    else:
+        np.testing.assert_allclose(pl[:, 0], fl[:, off + PREFIX - 1], **TOL)
+        for t in range(EXTRA):
+            d, cache = m.decode_step(params, cache,
+                                     {"tokens": toks[:, PREFIX + t]})
+            np.testing.assert_allclose(d, fl[:, off + PREFIX + t], **TOL)
+
+
+def test_sliding_window_ring_cache_matches_windowed_forward():
+    """A ring cache of width W must reproduce the windowed full forward."""
+    cfg, m, params, batch = _setup("yi-9b", sliding_window=8)
+    toks = batch["tokens"][:, :24]
+    cache, _ = split(m.init_cache(2, 64))     # ring: min(64, W=8) slots
+    fl, _ = m.forward(params, {"tokens": toks}, inference=True)
+    pl, cache = m.prefill(params, cache, {"tokens": toks[:, :20]})
+    np.testing.assert_allclose(pl[:, 0], fl[:, 19], **TOL)
+    for t in range(20, 24):
+        d, cache = m.decode_step(params, cache, {"tokens": toks[:, t]})
+        np.testing.assert_allclose(d, fl[:, t], **TOL)
+
+
+def test_window_equals_full_when_window_covers_seq():
+    cfg_w, m_w, params, batch = _setup("yi-9b", sliding_window=64)
+    cfg_f, m_f, _, _ = _setup("yi-9b")
+    toks = batch["tokens"][:, :24]
+    a, _ = m_w.forward(params, {"tokens": toks}, inference=True)
+    b, _ = m_f.forward(params, {"tokens": toks}, inference=True)
+    np.testing.assert_allclose(a, b, **TOL)
+
+
+def test_rwkv_chunk_size_is_execution_detail():
+    """MobiRNN invariant at model level: the chunk (work-unit) size of the
+    rwkv scan must not change the logits."""
+    outs = []
+    for chunk in (1, 4, 16):
+        cfg = ARCHS["rwkv6-3b"].reduced()
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=chunk))
+        m = registry.build(cfg)
+        params, _ = split(m.init(jax.random.PRNGKey(0)))
+        batch = registry.make_batch(cfg, SHAPE, jax.random.PRNGKey(1))
+        logits, _ = m.forward(params, {"tokens": batch["tokens"][:, :32]})
+        outs.append(np.asarray(logits))
+    np.testing.assert_allclose(outs[0], outs[1], **TOL)
+    np.testing.assert_allclose(outs[0], outs[2], **TOL)

@@ -1,0 +1,54 @@
+"""Work-unit cost model (paper Figs 2-3) and the Pallas block chooser."""
+import pytest
+
+from repro.core import factorization as fz
+
+
+def test_fine_grained_slower_on_mobile_gpu():
+    """The paper's central measurement: per-column factorization (Fig 2b)
+    on the constrained GPU is SLOWER than single-threaded CPU; the packed
+    factorization (Fig 2c) is faster."""
+    in_dim, out = 32, 120
+    t_fine_gpu = fz.factorize_gate(fz.MOBILE_GPU, in_dim, out, 1)
+    t_cpu = fz.factorize_gate(fz.MOBILE_CPU1, in_dim, out, out)
+    best = fz.best_cols_per_unit(fz.MOBILE_GPU, in_dim, out)
+    t_packed_gpu = fz.factorize_gate(fz.MOBILE_GPU, in_dim, out, best)
+    assert t_fine_gpu > t_cpu, "fine-grained offload must lose (Fig 3)"
+    assert t_packed_gpu < t_fine_gpu, "packing must win (Fig 2c)"
+
+
+def test_desktop_gpu_tolerates_fine_grain():
+    """On the desktop profile the same fine factorization is fine — that is
+    why the CUDA recipe exists in the first place."""
+    in_dim, out = 32, 120
+    t_fine_desktop = fz.factorize_gate(fz.DESKTOP_GPU, in_dim, out, 1)
+    t_cpu = fz.factorize_gate(fz.MOBILE_CPU1, in_dim, out, out)
+    assert t_fine_desktop < t_cpu
+
+
+def test_unit_time_monotone_in_units():
+    f = 2.0 * 32
+    t1 = fz.unit_time(fz.MOBILE_GPU, 1, f)
+    t120 = fz.unit_time(fz.MOBILE_GPU, 120, f)
+    assert t120 >= t1
+
+
+def test_choose_block_alignment_and_budget():
+    bm, bn, bk = fz.choose_block(4096, 11008, 4096)
+    for b in (bm, bn, bk):
+        assert b % fz.MXU_ALIGN == 0
+    ws = 2 * (bm * bk + bk * bn) + 4 * bm * bn
+    assert ws <= fz.DEFAULT_VMEM_BUDGET
+
+
+def test_choose_block_prefers_coarse():
+    """Small problems -> one block (the coarsest factorization that fits)."""
+    bm, bn, bk = fz.choose_block(128, 128, 128)
+    assert fz.grid_steps(128, 128, 128, (bm, bn, bk)) == 1
+
+
+def test_choose_block_shrinks_under_tiny_budget():
+    bm, bn, bk = fz.choose_block(4096, 4096, 4096,
+                                 vmem_budget=1 << 20)
+    ws = 2 * (bm * bk + bk * bn) + 4 * bm * bn
+    assert ws <= 1 << 20 or (bm == bn == bk == fz.MXU_ALIGN)

@@ -1,0 +1,62 @@
+"""flash_prefill Pallas kernel: shape/dtype/window sweeps vs naive oracle,
+agreement with the model's jnp blockwise attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,dh,qb,kb,w", [
+    (2, 64, 4, 2, 32, 16, 16, 0),
+    (1, 128, 8, 8, 16, 32, 64, 0),
+    (2, 96, 4, 1, 32, 32, 32, 24),
+    (1, 60, 2, 2, 16, 16, 16, 0),      # partial blocks
+    (1, 60, 2, 2, 16, 16, 16, 20),     # partial blocks + window
+])
+def test_flash_prefill_sweep(B, S, Hq, Hkv, dh, qb, kb, w):
+    ks = jax.random.split(jax.random.PRNGKey(S + Hq + w), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh))
+    o1 = ops.flash_prefill(q, k, v, window=w, q_block=qb, k_block=kb)
+    o2 = ref.prefill_attn(q, k, v, window=w)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32)).astype(dtype)
+    o1 = ops.flash_prefill(q, k, v, q_block=32, k_block=32)
+    o2 = ref.prefill_attn(q, k, v)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_prefill_matches_model_attention():
+    from repro.models.attention import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 96, 4, 16))
+    k = jax.random.normal(ks[1], (2, 96, 2, 16))
+    v = jax.random.normal(ks[2], (2, 96, 2, 16))
+    o_kernel = ops.flash_prefill(q, k, v, q_block=32, k_block=32)
+    o_model = flash_attention(q, k, v, q_block=32, kv_block=32)
+    np.testing.assert_allclose(o_kernel, o_model, rtol=2e-4, atol=2e-4)
+
+
+def test_block_size_never_changes_results():
+    """MobiRNN invariant at kernel level."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 2, 16))
+    v = jax.random.normal(ks[2], (1, 64, 2, 16))
+    outs = [ops.flash_prefill(q, k, v, q_block=qb, k_block=kb)
+            for qb, kb in [(16, 16), (64, 64), (32, 16), (16, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=2e-4, atol=2e-4)

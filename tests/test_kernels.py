@@ -1,0 +1,106 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,D,H", [(1, 9, 32), (6, 9, 40), (8, 32, 64),
+                                   (3, 128, 128), (5, 64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lstm_cell_sweep(B, D, H, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * H), 5)
+    w = (jax.random.normal(ks[0], (D + H, 4 * H)) * 0.2).astype(dtype)
+    b = (jax.random.normal(ks[1], (4 * H,)) * 0.1).astype(dtype)
+    x = jax.random.normal(ks[2], (B, D)).astype(dtype)
+    c = jax.random.normal(ks[3], (B, H)).astype(dtype)
+    h = jax.random.normal(ks[4], (B, H)).astype(dtype)
+    c1, h1 = ops.lstm_cell(w, b, x, c, h)
+    c2, h2 = ref.lstm_cell(w, b, x, c, h)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(c1, np.float32),
+                               np.asarray(c2, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_b,block_h", [(2, 16), (128, 128), (3, 8)])
+def test_lstm_cell_block_invariance(block_b, block_h):
+    """MobiRNN's point: factorization changes performance, never results."""
+    B, D, H = 5, 9, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    w = jax.random.normal(ks[0], (D + H, 4 * H)) * 0.2
+    b = jax.random.normal(ks[1], (4 * H,)) * 0.1
+    x, c, h = (jax.random.normal(k, (B, dim)) for k, dim in
+               zip(ks[2:], (D, H, H)))
+    c1, h1 = ops.lstm_cell(w, b, x, c, h, block_b=block_b, block_h=block_h)
+    c2, h2 = ref.lstm_cell(w, b, x, c, h)
+    np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,dk,dv,chunk", [(32, 8, 8, 8), (64, 16, 16, 16),
+                                           (64, 64, 64, 32), (16, 4, 8, 4)])
+def test_wkv6_sweep(T, dk, dv, chunk):
+    BH = 3
+    ks = jax.random.split(jax.random.PRNGKey(T + dk), 6)
+    r = jax.random.normal(ks[0], (BH, T, dk))
+    k = jax.random.normal(ks[1], (BH, T, dk))
+    v = jax.random.normal(ks[2], (BH, T, dv))
+    logw = -jnp.exp(jax.random.normal(ks[3], (BH, T, dk)))
+    u = jax.random.normal(ks[4], (BH, dk))
+    s0 = jax.random.normal(ks[5], (BH, dk, dv))
+    o1, s1 = ops.wkv6(r, k, v, logw, u, s0, chunk=chunk)
+    for i in range(BH):
+        o2, s2 = ref.wkv6_stepwise(r[i], k[i], v[i], logw[i], u[i], s0[i])
+        np.testing.assert_allclose(o1[i], o2, rtol=4e-4, atol=4e-4)
+        np.testing.assert_allclose(s1[i], s2, rtol=4e-4, atol=4e-4)
+
+
+def test_wkv6_strong_decay_stability():
+    """log-decay near the clamp floor must not overflow (the chunked form
+    only ever exponentiates non-positive numbers)."""
+    BH, T, dk = 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    r = jax.random.normal(ks[0], (BH, T, dk))
+    k = jax.random.normal(ks[1], (BH, T, dk))
+    v = jax.random.normal(ks[2], (BH, T, dk))
+    logw = jnp.full((BH, T, dk), -12.0)       # extremely strong decay
+    u = jax.random.normal(ks[3], (BH, dk))
+    s0 = jnp.zeros((BH, dk, dk))
+    o, s = ops.wkv6(r, k, v, logw, u, s0, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(o))) and bool(jnp.all(jnp.isfinite(s)))
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,dh,block", [
+    (2, 8, 2, 96, 32, 32), (1, 4, 4, 64, 64, 64), (3, 16, 2, 128, 16, 128),
+    (2, 2, 1, 33, 8, 16),
+])
+def test_decode_attn_sweep(B, Hq, Hkv, S, dh, block):
+    ks = jax.random.split(jax.random.PRNGKey(S + Hq), 3)
+    q = jax.random.normal(ks[0], (B, Hq, dh))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, dh))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, dh))
+    lens = jnp.arange(1, B + 1) * (S // (B + 1)) + 1
+    o1 = ops.decode_attn(q, kc, vc, lens.astype(jnp.int32), block_s=block)
+    o2 = ref.decode_attn(q, kc, vc, lens)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_chunked_ref_equals_stepwise():
+    """The chunked (coarse) jnp formulation == per-step (fine) recurrence —
+    MobiRNN's invariant that work-unit coarsening preserves results."""
+    T, dk = 48, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r, k, v = (jax.random.normal(ks[i], (T, dk)) for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (T, dk)))
+    u = jax.random.normal(ks[4], (dk,))
+    s0 = jax.random.normal(ks[5], (dk, dk))
+    for chunk in (1, 4, 12, 48):
+        o1, s1 = ref.wkv6(r, k, v, logw, u, s0, chunk=chunk)
+        o2, s2 = ref.wkv6_stepwise(r, k, v, logw, u, s0)
+        np.testing.assert_allclose(o1, o2, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(s1, s2, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,64 @@
+"""int8 KV cache (§Perf B3): accuracy + structural properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.models import registry
+from repro.partitioning import split
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg_q = dataclasses.replace(get_arch("yi-9b").reduced(), kv_quant=True)
+    cfg_f = get_arch("yi-9b").reduced()
+    m_q, m_f = registry.build(cfg_q), registry.build(cfg_f)
+    params, _ = split(m_q.init(jax.random.PRNGKey(0)))
+    batch = registry.make_batch(
+        cfg_q, ShapeConfig("s", 24, 2, "train"), jax.random.PRNGKey(1))
+    return cfg_q, m_q, m_f, params, batch["tokens"]
+
+
+def test_cache_dtype_and_bytes(pair):
+    cfg_q, m_q, _, _, _ = pair
+    cache, _ = split(m_q.init_cache(2, 32))
+    slot = cache["slots"][0]
+    assert slot["k"].dtype == jnp.int8
+    assert "k_scale" in slot and slot["k_scale"].dtype == jnp.float32
+    from repro import analysis
+    full = analysis.cache_bytes(dataclasses.replace(cfg_q, kv_quant=False,
+                                                    dtype="bfloat16"),
+                                2, 4096)
+    quant = analysis.cache_bytes(dataclasses.replace(cfg_q,
+                                                     dtype="bfloat16"),
+                                 2, 4096)
+    assert quant < 0.6 * full
+
+
+def test_decode_close_and_argmax_identical(pair):
+    cfg_q, m_q, m_f, params, toks = pair
+    cq, _ = split(m_q.init_cache(2, 32))
+    cf, _ = split(m_f.init_cache(2, 32))
+    _, cq = m_q.prefill(params, cq, {"tokens": toks[:, :16]})
+    _, cf = m_f.prefill(params, cf, {"tokens": toks[:, :16]})
+    for t in range(16, 20):
+        dq, cq = m_q.decode_step(params, cq, {"tokens": toks[:, t]})
+        df, cf = m_f.decode_step(params, cf, {"tokens": toks[:, t]})
+        rel = float(jnp.max(jnp.abs(dq - df))
+                    / (jnp.max(jnp.abs(df)) + 1e-9))
+        assert rel < 0.08, rel
+        np.testing.assert_array_equal(np.argmax(dq, -1), np.argmax(df, -1))
+
+
+def test_quantize_roundtrip_error_bound():
+    from repro.models.attention import _dequant, _quantize
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64)) * 3.0
+    q, s = _quantize(x)
+    back = _dequant(q, s, jnp.float32)
+    # symmetric int8: error <= scale/2 = amax/254 per element
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert bool(jnp.all(jnp.abs(back - x) <= amax / 254 + 1e-6))

@@ -1,0 +1,90 @@
+"""Logical-axis sharding rules: divisibility fallback, spec resolution."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import partitioning as pt
+
+
+def _mesh(shape=(1, 1), axes=("data", "model")):
+    devs = np.array(jax.devices()[:1]).reshape((1,) * len(shape))
+    devs = np.broadcast_to(devs, tuple(1 for _ in shape))
+    return Mesh(devs, axes)
+
+
+def _fake_mesh(data=16, model=16, pod=None):
+    """Mesh object with arbitrary logical sizes for rule resolution tests
+    (never used to place data)."""
+    class FakeMesh:
+        def __init__(self):
+            names = (("pod", "data", "model") if pod else ("data", "model"))
+            sizes = ((pod, data, model) if pod else (data, model))
+            self.shape = dict(zip(names, sizes))
+    return FakeMesh()
+
+
+def rules(**kw):
+    return pt.AxisRules(rules=pt.DEFAULT_RULES, mesh=_fake_mesh(**kw))
+
+
+def test_basic_resolution():
+    r = rules()
+    assert r.spec_for(("embed", "mlp"), (1024, 4096)) == P("data", "model")
+    assert r.spec_for(("batch", "seq"), (256, 4096)) == P("data")
+
+
+def test_divisibility_fallback():
+    r = rules()
+    # 14 heads cannot shard over a 16-way model axis -> replicated
+    assert r.spec_for(("embed", "heads", None), (896, 14, 64)) == P("data")
+    # but d_ff = 4864 = 16*304 still shards
+    assert r.spec_for(("embed", "mlp"), (896, 4864)) == P("data", "model")
+
+
+def test_multi_axis_batch():
+    r = rules(pod=2)
+    assert r.spec_for(("batch", "seq"), (256, 128)) == P(("pod", "data"))
+    # batch=1 (long_500k): falls back to replicated
+    assert r.spec_for(("batch", "seq"), (1, 128)) == P()
+
+
+def test_no_double_use_of_mesh_axis():
+    r = rules()
+    # cache axes: cache_seq takes 'model' first, kv_heads then can't
+    spec = r.spec_for(("layers", "batch", "cache_seq", "kv_heads", None),
+                      (4, 128, 32768, 16, 128))
+    assert spec == P(None, "data", "model")
+
+
+def test_partial_multi_axis_divisibility():
+    r = rules(pod=2)
+    # batch=32 divisible by pod*data=32 -> both axes
+    assert r.spec_for(("batch",), (32,)) == P(("pod", "data"))
+    # batch=16 not divisible by 32 -> drop trailing axis, keep pod? No:
+    # ('pod','data') -> trailing dropped gives ('pod',), 16 % 2 == 0
+    assert r.spec_for(("batch",), (16,)) == P(("pod",))
+
+
+def test_constrain_is_noop_outside_context():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert pt.constrain(x, ("batch", None)) is x
+
+
+def test_annot_roundtrip_through_eval_shape():
+    import jax.numpy as jnp
+
+    def init():
+        return {"w": pt.Annot(jnp.zeros((4, 8)), ("embed", "mlp"))}
+
+    abs_tree = jax.eval_shape(init)
+    vals, axes = pt.split(abs_tree)
+    assert vals["w"].shape == (4, 8)
+    assert axes["w"] == ("embed", "mlp")
+
+
+def test_annot_rank_mismatch_raises():
+    import jax.numpy as jnp
+    with pytest.raises(ValueError):
+        pt.Annot(jnp.zeros((4, 8)), ("embed",))

@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import factorization as fz
+from repro.core import wavefront
+from repro.core.scheduler import Plan, Scheduler, SyntheticLoadSensor
+from repro.core.state import StatePool
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# wkv6: chunk size never changes results; decay monotonicity
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(1, 24), st.integers(2, 12), st.integers(0, 2 ** 31 - 1))
+def test_wkv6_chunk_invariance(chunk_seed, dk, seed):
+    T = 24
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r, k = (jax.random.normal(ks[i], (T, dk)) for i in range(2))
+    v = jax.random.normal(ks[2], (T, dk))
+    logw = -jnp.exp(jax.random.normal(ks[3], (T, dk)))
+    u = jax.random.normal(ks[4], (dk,))
+    s0 = jax.random.normal(ks[5], (dk, dk)) * 0.3
+    chunk = [c for c in range(1, T + 1) if T % c == 0][chunk_seed % 4]
+    o1, s1 = ref.wkv6(r, k, v, logw, u, s0, chunk=chunk)
+    o2, s2 = ref.wkv6_stepwise(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(o1, o2, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(s1, s2, rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_wkv6_state_decays_to_kv_sum_bound(seed):
+    """With zero inputs after warmup and logw<0, the state magnitude must
+    shrink monotonically (pure decay)."""
+    dk = 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s = jax.random.normal(ks[0], (dk, dk))
+    logw = -jnp.exp(jax.random.normal(ks[1], (4, dk)))
+    zeros = jnp.zeros((4, dk))
+    _, s_next = ref.wkv6_stepwise(zeros, zeros, zeros, logw,
+                                  jnp.zeros((dk,)), s)
+    assert float(jnp.sum(jnp.abs(s_next))) <= float(jnp.sum(jnp.abs(s))) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# decode attention: padding positions never influence the output
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(1, 30), st.integers(0, 2 ** 31 - 1))
+def test_decode_attn_padding_invariance(length, seed):
+    B, H, S, dh = 1, 2, 32, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    kc = jax.random.normal(ks[1], (B, S, H, dh))
+    vc = jax.random.normal(ks[2], (B, S, H, dh))
+    garbage = jax.random.normal(ks[3], (B, S, H, dh)) * 100
+    lens = jnp.array([length], jnp.int32)
+    mask = (jnp.arange(S) < length)[None, :, None, None]
+    out1 = ref.decode_attn(q, kc, vc, lens)
+    out2 = ref.decode_attn(q, jnp.where(mask, kc, garbage),
+                           jnp.where(mask, vc, garbage), lens)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# state pool: capacity conservation under arbitrary checkout/return traces
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.lists(st.booleans(), min_size=1, max_size=40), st.integers(1, 5))
+def test_pool_conservation(trace, capacity):
+    pool = StatePool({"x": jax.ShapeDtypeStruct((2,), jnp.float32)},
+                     capacity=capacity)
+    held = []
+    for take in trace:
+        if take:
+            if pool.stats.outstanding < capacity:
+                held.append(pool.checkout())
+            else:
+                try:
+                    pool.checkout()
+                    assert False, "must raise at capacity"
+                except RuntimeError:
+                    pass
+        elif held:
+            pool.give_back(held.pop())
+        assert 0 <= pool.stats.outstanding <= capacity
+        assert pool.stats.outstanding == len(held)
+    assert pool.stats.high_water <= capacity
+
+
+# ---------------------------------------------------------------------------
+# scheduler: decision is monotone in load (once CPU wins, it keeps winning)
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.floats(1e-4, 1.0), st.floats(1e-4, 1.0))
+def test_scheduler_monotone_in_load(accel, cpu):
+    s = Scheduler(SyntheticLoadSensor(0.0))
+    s.register(Plan("accel", lambda: None, base_latency_s=accel, shared=True))
+    s.register(Plan("cpu", lambda: None, base_latency_s=cpu, shared=False))
+    picks = [s.choose(load=l / 20).plan for l in range(21)]
+    switched = False
+    for p in picks:
+        if p == "cpu":
+            switched = True
+        elif switched:
+            assert False, f"non-monotone decision sequence {picks}"
+
+
+# ---------------------------------------------------------------------------
+# wavefront width / factorization properties
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(1, 64), st.integers(1, 512))
+def test_wavefront_width_bounds(layers, seq):
+    w = wavefront.wavefront_width(layers, seq)
+    assert 1 <= w <= min(layers, seq)
+    assert wavefront.live_buffers(layers, seq) == 2 * w
+    assert wavefront.live_buffers(layers, seq) <= 2 * layers * seq
+
+
+@settings(**SETTINGS)
+@given(st.integers(16, 8192), st.integers(16, 16384), st.integers(16, 8192))
+def test_choose_block_always_fits(m, n, k):
+    bm, bn, bk = fz.choose_block(m, n, k)
+    ws = 2 * (bm * bk + bk * bn) + 4 * bm * bn
+    assert (ws <= fz.DEFAULT_VMEM_BUDGET
+            or (bm == fz.MXU_ALIGN and bn == fz.MXU_ALIGN
+                and bk == fz.MXU_ALIGN))
+    assert bm % fz.MXU_ALIGN == 0 and bn % fz.MXU_ALIGN == 0
+
+
+# ---------------------------------------------------------------------------
+# lstm cell: sigmoid gating bounds the cell state growth
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_lstm_cell_state_bound(seed):
+    """|c'| <= |c| + 1 elementwise (f,i in (0,1), tanh in (-1,1))."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    D = H = 8
+    w = jax.random.normal(ks[0], (D + H, 4 * H))
+    b = jax.random.normal(ks[1], (4 * H,))
+    x = jax.random.normal(ks[2], (3, D)) * 10
+    c = jax.random.normal(ks[3], (3, H)) * 10
+    h = jax.random.normal(ks[4], (3, H))
+    c2, h2 = ref.lstm_cell(w, b, x, c, h)
+    assert bool(jnp.all(jnp.abs(c2) <= jnp.abs(c) + 1.0 + 1e-5))
+    assert bool(jnp.all(jnp.abs(h2) <= 1.0 + 1e-6))

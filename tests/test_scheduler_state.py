@@ -1,0 +1,88 @@
+"""Load-aware scheduler (paper Fig 7) and preallocated state pools (§3.2)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.scheduler import (Plan, ProcLoadSensor, Scheduler,
+                                  SyntheticLoadSensor)
+from repro.core.state import StatePool
+import jax
+
+
+def _sched(accel_base=0.03, cpu_base=0.1):
+    s = Scheduler(SyntheticLoadSensor(0.0))
+    s.register(Plan("accel", lambda: None, base_latency_s=accel_base,
+                    shared=True, sensitivity=1.0))
+    s.register(Plan("cpu", lambda: None, base_latency_s=cpu_base,
+                    shared=False))
+    return s
+
+
+def test_low_load_prefers_accelerator():
+    s = _sched()
+    assert s.choose(load=0.1).plan == "accel"
+    assert s.choose(load=0.4).plan == "accel"
+
+
+def test_high_load_crosses_over_to_cpu():
+    """Paper Fig 7: under high accelerator load the CPU path wins."""
+    s = _sched()
+    assert s.choose(load=0.9).plan == "cpu"
+
+
+def test_crossover_point_matches_contention_model():
+    # accel wins iff base/(1-load) < cpu_base  =>  load < 1 - accel/cpu
+    s = _sched(accel_base=0.03, cpu_base=0.1)
+    crossover = 1 - 0.03 / 0.1
+    assert s.choose(load=crossover - 0.05).plan == "accel"
+    assert s.choose(load=crossover + 0.05).plan == "cpu"
+
+
+def test_observation_updates_base_latency():
+    s = _sched()
+    p = s.plans["accel"]
+    for _ in range(50):
+        p.observe(0.2, load=0.0)      # accel got slow
+    assert s.choose(load=0.0).plan == "cpu"
+
+
+def test_proc_sensor_in_range():
+    v = ProcLoadSensor().load()
+    assert 0.0 <= v <= 1.0
+
+
+# ---------------------------------------------------------------------------
+def _spec():
+    return {"c": jax.ShapeDtypeStruct((2, 4), jnp.float32),
+            "h": jax.ShapeDtypeStruct((2, 4), jnp.float32)}
+
+
+def test_pool_checkout_return_cycle():
+    pool = StatePool(_spec(), capacity=3)
+    a = pool.checkout()
+    b = pool.checkout()
+    assert pool.stats.outstanding == 2
+    pool.give_back(a)
+    pool.give_back(b)
+    assert pool.stats.outstanding == 0
+    assert pool.stats.high_water == 2
+
+
+def test_pool_exhaustion_raises():
+    pool = StatePool(_spec(), capacity=1)
+    pool.checkout()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.checkout()
+
+
+def test_pool_returns_zeroed_buffers():
+    pool = StatePool(_spec(), capacity=1)
+    buf = pool.checkout()
+    buf = {k: v + 7.0 for k, v in buf.items()}
+    pool.give_back(buf)
+    again = pool.checkout()
+    assert float(jnp.sum(jnp.abs(again["c"]))) == 0.0
+
+
+def test_pool_allocation_accounting():
+    pool = StatePool(_spec(), capacity=4)
+    assert pool.stats.allocation_bytes == 4 * 2 * (2 * 4 * 4)
