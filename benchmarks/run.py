@@ -77,6 +77,39 @@ def bench_fig3_factorization() -> None:
         f"gpu_fine/cpu={t_gpu_fine / t_cpu:.2f}x (paper: ~4x slower)")
 
 
+def bench_fig2_dispatch_counts() -> None:
+    """Fig 2/3's real lever, measured at the jaxpr level: kernel dispatches
+    per forward.  The per-cell fused plan launches one pallas_call per cell
+    per step (O(T*L)); the sequence-resident plan (kernels/lstm_seq.py)
+    launches exactly ONE regardless of T."""
+    from repro.analysis import count_kernel_dispatches
+
+    for T in (32, 128, 512):
+        cfg = MOBIRNN_LSTM
+        params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, T, cfg.input_dim))
+        n_cell = count_kernel_dispatches(jax.make_jaxpr(
+            lambda p, x: lstm.forward_fused_kernel(p, x, cfg))(params, x))
+        n_seq = count_kernel_dispatches(jax.make_jaxpr(
+            lambda p, x: lstm.forward_fused_seq(p, x, cfg))(params, x))
+        row(f"fig2/dispatch_fused_cell_T{T}", float(n_cell),
+            f"pallas_calls={n_cell} (O(T*L))")
+        row(f"fig2/dispatch_fused_seq_T{T}", float(n_seq),
+            f"pallas_calls={n_seq} (O(1) in T)")
+
+    # wall time of the two kernel plans at the paper's default shape
+    cfg = MOBIRNN_LSTM
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.input_dim))
+    t_cell = timeit(jax.jit(lambda p, x: lstm.forward_fused_kernel(
+        p, x, cfg)), params, x, repeats=2)
+    t_seq = timeit(jax.jit(lambda p, x: lstm.forward_fused_seq(
+        p, x, cfg)), params, x, repeats=2)
+    row("fig2/time_fused_cell_T32", t_cell, "interpret-mode wall time")
+    row("fig2/time_fused_seq_T32", t_seq,
+        f"speedup_vs_percell={t_cell / t_seq:.2f}x")
+
+
 def bench_fig4_speedup() -> None:
     cfg = MOBIRNN_LSTM
     in_dim = cfg.input_dim + cfg.hidden
@@ -121,10 +154,13 @@ def bench_fig7_load() -> None:
     x = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.seq_len,
                                                   cfg.input_dim))
     accel = jax.jit(lambda p, x: lstm.forward_wavefront(p, x, cfg))
+    accel_seq = jax.jit(lambda p, x: lstm.forward_fused_seq(p, x, cfg))
     cpu = jax.jit(lambda p, x: lstm.forward_sequential(p, x, cfg))
     sensor = SyntheticLoadSensor(0.0)
     sched = Scheduler(sensor)
     sched.register(Plan("accel", accel, shared=True, sensitivity=1.0))
+    sched.register(Plan("accel_seq", accel_seq, shared=True,
+                        sensitivity=1.0))
     sched.register(Plan("cpu", cpu, shared=False))
     sched.calibrate(params, x)
     for load in (0.1, 0.3, 0.5, 0.7, 0.9):
@@ -215,6 +251,7 @@ def bench_moe_capacity() -> None:
 
 def main() -> None:
     print("name,us_per_call,derived")
+    bench_fig2_dispatch_counts()
     bench_fig3_factorization()
     bench_fig4_speedup()
     bench_fig5_complexity()

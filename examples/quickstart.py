@@ -1,9 +1,10 @@
 """Quickstart: the paper's model end to end in ~60 lines.
 
-Builds MobiRNN's 2-layer x 32-hidden stacked LSTM, runs it under all three
-execution plans (sequential, wavefront, fused Pallas kernel), verifies they
-agree, trains it briefly on the synthetic HAR data, and shows the load-aware
-scheduler choosing a backend — the whole paper in miniature.
+Builds MobiRNN's 2-layer x 32-hidden stacked LSTM, runs it under all FOUR
+execution plans (sequential, wavefront, per-cell fused Pallas kernel, and
+the sequence-resident Pallas kernel — one dispatch for the whole sequence),
+verifies they agree, trains it briefly on the synthetic HAR data, and shows
+the load-aware scheduler choosing a backend — the whole paper in miniature.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -26,15 +27,23 @@ def main() -> None:
     x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.seq_len,
                                                   cfg.input_dim))
 
-    # --- three execution plans, one result --------------------------------
+    # --- four execution plans, one result ---------------------------------
     seq = lstm.forward_sequential(params, x, cfg)
     wave = lstm.forward_wavefront(params, x, cfg)
     fused = lstm.forward_fused_kernel(params, x[:, :16], cfg)
+    fused_seq = lstm.forward_fused_seq(params, x, cfg)
     print("wavefront == sequential:",
           bool(jnp.allclose(seq, wave, atol=1e-4)))
+    print("fused_seq == sequential:",
+          bool(jnp.allclose(seq, fused_seq, atol=1e-4)))
     print(f"wavefront width: {wavefront.wavefront_width(cfg.n_layers, 4)} "
           f"-> {wavefront.live_buffers(cfg.n_layers, 4)} preallocated "
           f"buffers (paper Fig 1: 6 instead of 24)")
+    from repro.analysis import count_kernel_dispatches
+    n = count_kernel_dispatches(jax.make_jaxpr(
+        lambda p, x: lstm.forward_fused_seq(p, x, cfg))(params, x))
+    print(f"fused_seq kernel dispatches for T={cfg.seq_len}: {n} "
+          f"(per-cell plan: {cfg.seq_len * cfg.n_layers})")
     del fused
 
     # --- brief training on HAR -------------------------------------------
@@ -63,6 +72,9 @@ def main() -> None:
     sched = Scheduler(sensor)
     sched.register(Plan("accel/wavefront",
                         jax.jit(lambda p, x: lstm.forward_wavefront(
+                            p, x, cfg)), shared=True))
+    sched.register(Plan("accel/fused_seq",
+                        jax.jit(lambda p, x: lstm.forward_fused_seq(
                             p, x, cfg)), shared=True))
     sched.register(Plan("cpu/sequential",
                         jax.jit(lambda p, x: lstm.forward_sequential(

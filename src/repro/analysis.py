@@ -18,6 +18,51 @@ ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
 
 
 # ---------------------------------------------------------------------------
+# Kernel-dispatch accounting (MobiRNN §3.1: dispatch overhead is the enemy)
+# ---------------------------------------------------------------------------
+def _sub_jaxprs(value):
+    """Yield every (Closed)Jaxpr nested in an eqn param value."""
+    if hasattr(value, "eqns") or hasattr(value, "jaxpr"):
+        yield value
+    elif isinstance(value, (tuple, list)):
+        for item in value:
+            yield from _sub_jaxprs(item)
+
+
+def count_kernel_dispatches(jaxpr) -> int:
+    """Count ``pallas_call`` executions implied by a traced computation,
+    multiplying through ``scan`` trip counts (a kernel inside a scanned body
+    dispatches once per trip even though the jaxpr lists it once).
+
+    This is the quantity MobiRNN §3.1 says dominates on constrained
+    accelerators: the per-cell LSTM plan traces to T*L dispatches, the
+    sequence-resident plan (kernels/lstm_seq.py) to exactly 1 — O(1) in T.
+    ``cond`` branches count as their max; ``while`` bodies (trip count not
+    static) count once, making the result a lower bound there.
+
+    Accepts the return of ``jax.make_jaxpr(fn)(*args)``.
+    """
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            total += 1
+            continue
+        subs = [j for v in eqn.params.values() for j in _sub_jaxprs(v)]
+        if not subs:
+            continue
+        counts = [count_kernel_dispatches(j) for j in subs]
+        if name == "scan":
+            total += eqn.params["length"] * sum(counts)
+        elif name == "cond":
+            total += max(counts)
+        else:                      # pjit / custom_vjp / while / remat ...
+            total += sum(counts)
+    return total
+
+
+# ---------------------------------------------------------------------------
 # Analytic parameter counts
 # ---------------------------------------------------------------------------
 def _attn_params(cfg: ModelConfig) -> int:

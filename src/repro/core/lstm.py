@@ -1,15 +1,26 @@
 """The paper's model: stacked LSTM for activity recognition (MobiRNN §4.1).
 
-Three execution plans over the same parameters (all numerically equivalent,
-asserted by tests):
+FOUR execution plans over the same parameters (all numerically equivalent,
+asserted by tests/test_plan_equivalence.py), and when the scheduler
+(core/scheduler.py) should prefer each:
 
 * ``forward_sequential`` — reference plan: scan over time, layers unrolled
-  inside the step (the single-threaded baseline of Fig 3/4).
+  inside the step (the single-threaded baseline of Fig 3/4).  Prefer on the
+  CPU path / under high accelerator load (paper Fig 7).
 * ``forward_wavefront`` — the paper's Fig 1 diagonal parallelism: cells on an
   anti-diagonal (layer i, time t, i+t = const) execute together as ONE vmapped
-  cell call over layers (see core/wavefront.py).
+  cell call over layers (see core/wavefront.py).  Prefer when L is large
+  enough for the diagonal batching to pay for its masking overhead.
 * ``forward_fused_kernel`` — sequential plan but each cell is the Pallas
-  fused-gate kernel (kernels/lstm_cell.py) instead of jnp ops.
+  fused-gate kernel (kernels/lstm_cell.py) instead of jnp ops.  T x L kernel
+  dispatches; prefer in COMPUTE-BOUND regimes where H is too large for the
+  whole weight stack to sit in VMEM (the per-cell kernel tiles hidden).
+* ``forward_fused_seq`` — sequence-resident Pallas kernel
+  (kernels/lstm_seq.py): the whole T-step, L-layer recurrence in ONE
+  dispatch, weights loaded to VMEM once, (c, h) never leaving VMEM.  Prefer
+  in DISPATCH-BOUND regimes (small/medium models, long sequences) — the
+  MobiRNN fast path.  Falls back to ``forward_fused_kernel`` when the
+  stacked weights exceed the VMEM budget (core/factorization).
 
 The classifier head follows Guan & Ploetz-style HAR models: last hidden state
 -> dense -> 6-way softmax.
@@ -101,11 +112,51 @@ def forward_fused_kernel(params: dict, x: jax.Array, cfg: LSTMConfig,
     return forward_sequential(params, x, cfg, cell_fn=cell_fn)
 
 
+def forward_fused_seq(params: dict, x: jax.Array, cfg: LSTMConfig,
+                      interpret: bool = True,
+                      vmem_budget: int | None = None) -> jax.Array:
+    """Sequence-resident plan: ONE Pallas dispatch for the whole (T x L)
+    recurrence (kernels/lstm_seq.py) — dispatch count O(1) in T instead of
+    the per-cell plan's O(T*L).
+
+    When the stacked (L, P+H, 4H) weights (plus state and the input block)
+    exceed the VMEM budget, routes to ``forward_fused_kernel``, whose
+    per-cell kernel tiles the hidden dimension through HBM instead.
+    """
+    from repro.kernels import lstm_seq as seq_lib
+    from repro.kernels import ops as kernel_ops
+
+    p = _plain_params(params)
+    w_stack, b_stack, p_width = seq_lib.stack_params(p["layers"], cfg.hidden)
+    B, T, _ = x.shape
+    block_b = seq_lib.choose_batch_block(
+        B, T, cfg.n_layers, p_width, cfg.hidden,
+        dtype_bytes=jnp.dtype(x.dtype).itemsize, vmem_budget=vmem_budget,
+        w_dtype_bytes=jnp.dtype(w_stack.dtype).itemsize)
+    if block_b is None:   # working set (weights + T-resident input) > VMEM
+        return forward_fused_kernel(params, x, cfg, interpret=interpret)
+    xp = seq_lib.pad_input(x, p_width)
+    _, h = kernel_ops.lstm_seq(w_stack, b_stack, xp, block_b=block_b,
+                               interpret=interpret)
+    return h[-1] @ p["head"]["w"] + p["head"]["b"]
+
+
 def forward_wavefront(params: dict, x: jax.Array, cfg: LSTMConfig
                       ) -> jax.Array:
     """Paper Fig 1 diagonal plan — see core/wavefront.py."""
     from repro.core import wavefront
     return wavefront.forward_wavefront(params, x, cfg)
+
+
+#: All four execution plans, keyed by scheduler Plan name — the registration
+#: table used by benchmarks/run.py, examples/quickstart.py, and the
+#: equivalence tests.  Every entry maps (params, x, cfg) -> logits.
+FORWARD_PLANS: dict[str, Callable] = {
+    "sequential": forward_sequential,
+    "wavefront": forward_wavefront,
+    "fused_cell": forward_fused_kernel,
+    "fused_seq": forward_fused_seq,
+}
 
 
 def loss_fn(params: dict, x: jax.Array, labels: jax.Array, cfg: LSTMConfig,

@@ -8,6 +8,17 @@ base latency and a contention model; a pluggable ``LoadSensor`` supplies the
 current load; ``Scheduler.choose`` picks the predicted-fastest plan and
 ``Scheduler.record`` folds observed latencies back into the calibration
 (exponential moving average), so the crossover point is learned, not assumed.
+
+The four LSTM execution plans it schedules (core/lstm.FORWARD_PLANS; see
+that module's docstring for the full decision table):
+
+* ``sequential`` / ``wavefront`` — XLA plans; the CPU-ish and
+  diagonal-parallel baselines.
+* ``fused_cell`` — per-cell Pallas kernel, T x L dispatches.  Wins in
+  compute-bound regimes (H too large for VMEM-resident weights).
+* ``fused_seq`` — sequence-resident Pallas kernel, ONE dispatch.  Wins in
+  dispatch-bound regimes (the MobiRNN case: small models, long sequences);
+  auto-falls-back to ``fused_cell`` past the VMEM budget.
 """
 from __future__ import annotations
 

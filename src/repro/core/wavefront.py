@@ -32,25 +32,23 @@ def live_buffers(n_layers: int, seq_len: int) -> int:
     return 2 * wavefront_width(n_layers, seq_len)
 
 
-def stack_homogeneous(params: dict, cfg: LSTMConfig) -> tuple[jax.Array, jax.Array]:
-    """Stack per-layer cell params to (L, 2H, 4H) / (L, 4H).
+def stack_homogeneous(params: dict, cfg: LSTMConfig
+                      ) -> tuple[jax.Array, jax.Array, int]:
+    """Stack per-layer cell params to (L, P+H, 4H) / (L, 4H).
 
-    Layer 0 consumes ``input_dim``-dim inputs; to vmap one cell over all
-    layers, its weight rows are zero-padded from (input_dim + H) to 2H and
-    the raw input is zero-padded to H at call time.  Exactly equivalent math.
+    To vmap one cell over all layers, every layer's input rows are
+    zero-padded to the common width P = max(input_dim, H) and inputs are
+    zero-padded to P at call time (padded rows multiply padded zeros —
+    exactly equivalent math).  For the paper's models input_dim <= H, so
+    P = H and the stack is the (L, 2H, 4H) of Fig 1.  Shared with the
+    sequence-resident kernel: kernels/lstm_seq.stack_params is the
+    un-annotated twin of this function.
+
+    Returns (w_stack, b_stack, P).
     """
+    from repro.kernels.lstm_seq import stack_params
     p, _ = split(params)
-    ws, bs = [], []
-    h = cfg.hidden
-    for i, layer in enumerate(p["layers"]):
-        w = layer["w"]
-        in_dim = w.shape[0] - h
-        if in_dim < h:
-            pad = jnp.zeros((h - in_dim, 4 * h), w.dtype)
-            w = jnp.concatenate([w[:in_dim], pad, w[in_dim:]], axis=0)
-        ws.append(w)
-        bs.append(layer["b"])
-    return jnp.stack(ws), jnp.stack(bs)
+    return stack_params(p["layers"], cfg.hidden)
 
 
 def forward_wavefront(params: dict, x: jax.Array, cfg: LSTMConfig) -> jax.Array:
@@ -58,10 +56,10 @@ def forward_wavefront(params: dict, x: jax.Array, cfg: LSTMConfig) -> jax.Array:
     p, _ = split(params)
     L, H = cfg.n_layers, cfg.hidden
     B, T, D = x.shape
-    w_stack, b_stack = stack_homogeneous(params, cfg)  # (L,2H,4H), (L,4H)
+    w_stack, b_stack, P = stack_homogeneous(params, cfg)  # (L,P+H,4H), ..
 
-    # time-padded, H-padded input belt source: x_pad[t] valid for t < T
-    x_pad = jnp.zeros((T + L, B, H), x.dtype)
+    # time-padded, P-padded input belt source: x_pad[t] valid for t < T
+    x_pad = jnp.zeros((T + L, B, P), x.dtype)
     x_pad = x_pad.at[:T, :, :D].set(jnp.swapaxes(x, 0, 1))
 
     def diag_cell(w, b, inp, c, h):
@@ -76,7 +74,7 @@ def forward_wavefront(params: dict, x: jax.Array, cfg: LSTMConfig) -> jax.Array:
 
     c0 = jnp.zeros((L, B, H), x.dtype)
     h0 = jnp.zeros((L, B, H), x.dtype)
-    belt0 = jnp.zeros((L, B, H), x.dtype)   # belt[i] = input for layer i
+    belt0 = jnp.zeros((L, B, P), x.dtype)   # belt[i] = input for layer i
     layer_ids = jnp.arange(L)
 
     def diagonal(carry, d):
@@ -91,7 +89,10 @@ def forward_wavefront(params: dict, x: jax.Array, cfg: LSTMConfig) -> jax.Array:
         c = jnp.where(mask, c_new, c)
         h = jnp.where(mask, h_new, h)
         # belt shifts down one layer: layer i+1's next input is layer i's h
-        belt = jnp.concatenate([jnp.zeros_like(h[:1]), h[:-1]], axis=0)
+        h_belt = h if P == H else \
+            jnp.pad(h, ((0, 0), (0, 0), (0, P - H)))
+        belt = jnp.concatenate([jnp.zeros_like(h_belt[:1]), h_belt[:-1]],
+                               axis=0)
         return (c, h, belt), None
 
     (c, h, _), _ = jax.lax.scan(

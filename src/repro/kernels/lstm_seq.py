@@ -1,0 +1,260 @@
+"""Sequence-resident fused stacked-LSTM Pallas kernel.
+
+MobiRNN's §3.2-3.3 lesson is that RNN latency on a constrained accelerator
+is won by coarsening work units and keeping state resident.  The per-cell
+kernel (kernels/lstm_cell.py) coarsens WITHIN a timestep but still launches
+one ``pallas_call`` per cell per step — T x L dispatches, with the gate
+weights re-read from HBM every time.  This kernel moves the ENTIRE time loop
+inside one ``pallas_call``:
+
+* grid over batch tiles — batch rows are independent, so they tile freely;
+* ``jax.lax.fori_loop`` over T inside the kernel body;
+* stacked per-layer weights ``(L, P+H, 4H)`` loaded into VMEM once and
+  reused across all T timesteps (P = max(input_dim, H), rows zero-padded so
+  every layer shares one shape — same trick as wavefront.stack_homogeneous);
+* ``(c, h)`` carried in VMEM scratch, so recurrent state never round-trips
+  HBM between steps — the paper's preallocation bound realised at kernel
+  level.
+
+Dispatch count is O(1) in sequence length instead of O(T*L)
+(``analysis.count_kernel_dispatches`` asserts this in tests and benchmarks).
+
+Why the grid does NOT tile the hidden dimension: h_t feeds the gates of
+step t+1 across ALL hidden columns, so a hidden tile would need the other
+tiles' h before its own time loop could advance — the recurrence makes
+hidden tiles non-independent.  When the ``(L, P+H, 4H)`` weight stack (plus
+state and the input block) exceeds the VMEM budget, ``choose_batch_block``
+returns None and callers fall back to the per-cell kernel, which DOES tile
+hidden because it re-synchronises through HBM every step.  See
+core/lstm.py for the four-plan decision table.
+
+Autodiff: ``pallas_call`` has no VJP rule, so ``lstm_seq`` wraps the kernel
+in a ``jax.custom_vjp`` whose backward pass differentiates the pure-jnp
+oracle (kernels/ref.lstm_seq) — numerically identical forward math, so the
+gradients are exact (tests/test_lstm_seq.py checks against end-to-end
+reference grads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import factorization
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Parameter stacking — one (L, P+H, 4H) weight block the kernel loads once.
+# ---------------------------------------------------------------------------
+def stack_params(layers: list[dict], hidden: int
+                 ) -> tuple[jax.Array, jax.Array, int]:
+    """Stack per-layer cell params to (L, P+H, 4H) / (L, 4H).
+
+    ``layers`` are PLAIN (un-annotated) per-layer dicts with "w" of shape
+    (in_dim_i + H, 4H).  Rows are rearranged to [input rows | h rows] with
+    the input rows zero-padded to P = max(max_i in_dim_i, H), so one VMEM
+    block serves every layer; callers zero-pad the raw input to width P
+    (pad_input).  Padding rows multiply padded zeros — exactly equivalent.
+    Returns (w_stack, b_stack, P).
+    """
+    in_dims = [layer["w"].shape[0] - hidden for layer in layers]
+    p_width = max(max(in_dims), hidden)
+    ws, bs = [], []
+    for layer, in_dim in zip(layers, in_dims):
+        w = layer["w"]
+        if in_dim < p_width:
+            pad = jnp.zeros((p_width - in_dim, 4 * hidden), w.dtype)
+            w = jnp.concatenate([w[:in_dim], pad, w[in_dim:]], axis=0)
+        ws.append(w)
+        bs.append(layer["b"])
+    return jnp.stack(ws), jnp.stack(bs), p_width
+
+
+def pad_input(x: jax.Array, p_width: int) -> jax.Array:
+    """Zero-pad x: (B, T, D) to (B, T, P) to match the stacked weight rows."""
+    d = x.shape[-1]
+    if d == p_width:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, p_width - d)))
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget — the MobiRNN packing rule applied to the whole sequence.
+# ---------------------------------------------------------------------------
+def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
+                      block_b: int, dtype_bytes: int = 4,
+                      w_dtype_bytes: int | None = None) -> int:
+    """Kernel working set for one grid step: stacked weights + the batch
+    tile's whole input sequence + f32 (c,h) scratch + output blocks.
+
+    ``dtype_bytes`` sizes activations/outputs; ``w_dtype_bytes`` sizes the
+    weight stack (defaults to ``dtype_bytes`` — pass it explicitly under
+    mixed precision, e.g. bf16 activations over f32 parameters)."""
+    wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
+    weights = n_layers * (p_width + hidden) * 4 * hidden * wb
+    biases = n_layers * 4 * hidden * wb
+    x_block = block_b * seq_len * p_width * dtype_bytes
+    state = 2 * n_layers * block_b * hidden * 4          # f32 scratch
+    outs = 2 * n_layers * block_b * hidden * dtype_bytes
+    return weights + biases + x_block + state + outs
+
+
+def choose_batch_block(batch: int, seq_len: int, n_layers: int,
+                       p_width: int, hidden: int, dtype_bytes: int = 4,
+                       vmem_budget: int | None = None,
+                       w_dtype_bytes: int | None = None) -> int | None:
+    """Pick the batch tile, or None when the kernel is not viable.
+
+    Seeds the tile from factorization.choose_block on the per-step gate
+    matmul (B, P+H) x (P+H, 4H) — the coarsest MXU-aligned block — then
+    halves it until the sequence-resident working set fits the budget.
+    Returns None when even a bm=1 tile cannot fit — either the weight
+    stack itself blows VMEM (large H/L) or the whole-sequence input block
+    does (very large T: the kernel keeps all T timesteps resident;
+    time-tiling the input DMA is a ROADMAP open item).  Callers then fall
+    back to the per-cell kernel.
+    """
+    budget = factorization.DEFAULT_VMEM_BUDGET if vmem_budget is None \
+        else vmem_budget
+    bm, _, _ = factorization.choose_block(
+        batch, 4 * hidden, p_width + hidden, bytes_per_elem=dtype_bytes,
+        vmem_budget=budget)
+    bm = min(bm, batch)
+    while bm >= 1:
+        if working_set_bytes(seq_len, n_layers, p_width, hidden, bm,
+                             dtype_bytes, w_dtype_bytes) <= budget:
+            return bm
+        if bm == 1:
+            break
+        bm = max(bm // 2, 1)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+def _seq_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, c_scr, h_scr,
+                *, n_layers: int, seq_len: int, p_width: int):
+    """One batch tile runs the whole (T x L) recurrence from VMEM.
+
+    x_ref: (T, bm, P) time-major input tile; w_ref: (L, P+H, 4H);
+    b_ref: (L, 4H); c_scr/h_scr: (L, bm, H) f32 VMEM scratch that IS the
+    paper's preallocated state — written every step, never leaving VMEM.
+    """
+    c_scr[...] = jnp.zeros_like(c_scr)
+    h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, carry):
+        inp = x_ref[pl.ds(t, 1)][0].astype(F32)          # (bm, P)
+        for layer in range(n_layers):                    # static unroll
+            w = w_ref[layer]                             # (P+H, 4H)
+            # one coarse MXU work unit per layer: all four gates at once,
+            # split as x-part + h-part to skip an in-loop concatenate
+            gates = (
+                jax.lax.dot_general(inp, w[:p_width],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=F32)
+                + jax.lax.dot_general(h_scr[layer], w[p_width:],
+                                      (((1,), (0,)), ((), ())),
+                                      preferred_element_type=F32)
+                + b_ref[layer].astype(F32))
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c_new = (jax.nn.sigmoid(f) * c_scr[layer]
+                     + jax.nn.sigmoid(i) * jnp.tanh(g))
+            h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+            c_scr[layer] = c_new
+            h_scr[layer] = h_new
+            hidden = h_new.shape[-1]
+            inp = h_new if p_width == hidden else \
+                jnp.pad(h_new, ((0, 0), (0, p_width - hidden)))
+        return carry
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+    c_out_ref[...] = c_scr[...].astype(c_out_ref.dtype)
+    h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _lstm_seq_call(w: jax.Array, b: jax.Array, x: jax.Array,
+                   block_b: int, interpret: bool
+                   ) -> tuple[jax.Array, jax.Array]:
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    B, T, _ = x.shape
+    bm = min(block_b, B)
+    xt = jnp.swapaxes(x, 0, 1)                           # (T, B, P)
+    out = jax.ShapeDtypeStruct((L, B, H), x.dtype)
+    kernel = functools.partial(_seq_kernel, n_layers=L, seq_len=T,
+                               p_width=P)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(B, bm),),
+        in_specs=[
+            pl.BlockSpec((T, bm, P), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+        ],
+        out_shape=[out, out],
+        scratch_shapes=[
+            pltpu.VMEM((L, bm, H), F32),
+            pltpu.VMEM((L, bm, H), F32),
+        ],
+        interpret=interpret,
+    )(xt, w, b)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable entry point
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _lstm_seq(w, b, x, block_b, interpret):
+    return _lstm_seq_call(w, b, x, block_b, interpret)
+
+
+def _lstm_seq_fwd(w, b, x, block_b, interpret):
+    return _lstm_seq_call(w, b, x, block_b, interpret), (w, b, x)
+
+
+def _lstm_seq_bwd(block_b, interpret, residuals, cotangents):
+    from repro.kernels import ref
+    w, b, x = residuals
+    _, vjp = jax.vjp(ref.lstm_seq, w, b, x)
+    return vjp(cotangents)
+
+
+_lstm_seq.defvjp(_lstm_seq_fwd, _lstm_seq_bwd)
+
+
+def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
+             block_b: int | None = None, interpret: bool = True
+             ) -> tuple[jax.Array, jax.Array]:
+    """Whole-sequence stacked LSTM in ONE kernel dispatch.
+
+    w: (L, P+H, 4H) stacked gate weights (stack_params); b: (L, 4H);
+    x: (B, T, P) input zero-padded to width P (pad_input).
+    Returns final (c, h), each (L, B, H).  Oracle: kernels/ref.lstm_seq.
+    """
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    B, T, xw = x.shape
+    assert w.shape[1] == P + H and xw == P, (w.shape, x.shape)
+    if block_b is None:
+        block_b = choose_batch_block(
+            B, T, L, P, H, dtype_bytes=jnp.dtype(x.dtype).itemsize,
+            w_dtype_bytes=jnp.dtype(w.dtype).itemsize)
+        if block_b is None:
+            raise ValueError(
+                f"sequence-resident working set (L={L}, P+H={P + H}, "
+                f"4H={4 * H}, T={T}) exceeds the VMEM budget even at "
+                "batch tile 1; use the per-cell fallback "
+                "(core/lstm.forward_fused_seq routes this automatically)")
+    return _lstm_seq(w, b, x, block_b, interpret)

@@ -26,6 +26,42 @@ def lstm_cell(w: jax.Array, b: jax.Array, x: jax.Array, c: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Sequence-resident stacked LSTM (kernels/lstm_seq.py)
+# ---------------------------------------------------------------------------
+def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array
+             ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the whole-sequence stacked-LSTM kernel.
+
+    w: (L, P+H, 4H) stacked gate weights (gate order i,f,g,o), where
+    P >= H is the padded per-layer input width (see lstm_seq.stack_params);
+    b: (L, 4H); x: (B, T, P) input already zero-padded to width P.
+    Returns final (c, h), each (L, B, H) — h[-1] feeds the classifier head.
+    """
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    B = x.shape[0]
+    f32 = jnp.float32
+    c0 = jnp.zeros((L, B, H), f32)
+    h0 = jnp.zeros((L, B, H), f32)
+
+    def step(carry, x_t):
+        c, h = carry
+        inp = x_t.astype(f32)                       # (B, P)
+        cs, hs = [], []
+        for l in range(L):
+            # per-layer step IS the fused-cell oracle on the stacked
+            # (P+H, 4H) weights: concat([inp, h]) @ w[l]
+            c_new, h_new = lstm_cell(w[l], b[l], inp, c[l], h[l])
+            cs.append(c_new)
+            hs.append(h_new)
+            inp = jnp.pad(h_new, ((0, 0), (0, P - H))) if P > H else h_new
+        return (jnp.stack(cs), jnp.stack(hs)), None
+
+    (c, h), _ = jax.lax.scan(step, (c0, h0), jnp.swapaxes(x, 0, 1))
+    return c.astype(x.dtype), h.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # RWKV6 chunked wkv scan (kernels/wkv6.py)
 # ---------------------------------------------------------------------------
 def wkv6_chunk(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.partitioning import Annot, constrain
+from repro.partitioning import Annot, constrain, shard_map
 
 
 def init_moe(key, cfg: ModelConfig, dtype) -> dict:
@@ -136,6 +136,20 @@ def _apply_moe_dense(p: dict, x: jax.Array, cfg: ModelConfig,
     return out.reshape(orig_shape).astype(x.dtype), aux
 
 
+@jax.custom_jvp
+def _dtype_pin(x):
+    """optimization_barrier with an identity differentiation rule — the
+    barrier is a scheduling hint, so its tangent/cotangent pass straight
+    through (jax < 0.5 defines no rule for the raw primitive)."""
+    return jax.lax.optimization_barrier(x)
+
+
+@_dtype_pin.defjvp
+def _dtype_pin_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return _dtype_pin(x), t
+
+
 # ---------------------------------------------------------------------------
 # Expert-parallel shard_map path.
 #
@@ -209,9 +223,12 @@ def _apply_moe_ep(p: dict, x: jax.Array, cfg: ModelConfig, rules,
         out_k = out_k * top_p.reshape(-1)[:, None].astype(out_k.dtype)
         partial = jnp.sum(out_k.reshape(T, K, d), axis=1)
         # pin the combine to the model dtype: the barrier stops XLA hoisting
-        # the downstream f32 convert above the all-reduce (2x ICI bytes)
-        partial = jax.lax.optimization_barrier(
-            partial.astype(x_loc.dtype))
+        # the downstream f32 convert above the all-reduce (2x ICI bytes).
+        # _dtype_pin wraps the barrier in an identity-tangent custom_jvp so
+        # the hint stays active under differentiation on every jax version
+        # (jax < 0.5 defines no rule for the raw primitive).
+        partial = partial.astype(x_loc.dtype)
+        partial = _dtype_pin(partial)
         out = jax.lax.psum(partial, "model")            # combine experts
 
         me = jnp.mean(probs, axis=0)
@@ -229,8 +246,7 @@ def _apply_moe_ep(p: dict, x: jax.Array, cfg: ModelConfig, rules,
             aux = jax.lax.pmean(aux, batch_axes)
         return out.reshape(B, S, d).astype(x_loc.dtype), aux
 
-    fn = jax.shard_map(local_fn, mesh=mesh,
-                       in_specs=(x_spec, p_specs),
-                       out_specs=(x_spec, aux_spec),
-                       check_vma=False)
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(x_spec, p_specs),
+                   out_specs=(x_spec, aux_spec))
     return fn(x, p)

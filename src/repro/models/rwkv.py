@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import common
-from repro.partitioning import Annot
+from repro.partitioning import Annot, shard_map
 
 N_MIX = 5  # w, k, v, r, g interpolation vectors
 
@@ -273,11 +273,10 @@ def _apply_tmix_seqpar(p: dict, cfg: ModelConfig, x: jax.Array,
         out = (out.astype(x_loc.dtype) * g) @ p_loc["wo"]
         return out, shift.astype(x_loc.dtype), s_fin
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(x_spec, bvec_spec, st_spec, p_spec),
-        out_specs=(x_spec, bvec_spec, st_spec),
-        check_vma=False)
+        out_specs=(x_spec, bvec_spec, st_spec))
     return fn(x, x_prev, state, p)
 
 

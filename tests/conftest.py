@@ -7,6 +7,14 @@ jax.config.update("jax_enable_x64", False)
 # the 512-device placeholder topology.
 
 
+def pytest_configure(config):
+    # quick loop: pytest -q -m "not slow"  (~quarter of the full runtime).
+    # The tier-1 gate stays the FULL suite: PYTHONPATH=src pytest -x -q
+    config.addinivalue_line(
+        "markers", "slow: multi-second integration sweep; deselect with "
+        "-m \"not slow\" for the quick loop")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

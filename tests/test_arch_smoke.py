@@ -12,6 +12,9 @@ from repro.models import registry
 from repro.optim import AdamW
 from repro.partitioning import split
 
+# multi-second integration sweeps: excluded from the quick loop (-m "not slow")
+pytestmark = pytest.mark.slow
+
 SHAPE = ShapeConfig("smoke", 32, 2, "train")
 
 

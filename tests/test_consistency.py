@@ -14,6 +14,9 @@ from repro.configs.base import ShapeConfig
 from repro.models import registry
 from repro.partitioning import split
 
+# multi-second integration sweeps: excluded from the quick loop (-m "not slow")
+pytestmark = pytest.mark.slow
+
 SHAPE = ShapeConfig("smoke", 33, 2, "train")
 PREFIX, EXTRA = 16, 2
 TOL = dict(rtol=3e-4, atol=3e-4)

@@ -21,6 +21,7 @@ def setup():
     return cfg, params, x
 
 
+@pytest.mark.slow
 def test_fused_equals_fine(setup):
     """MobiRNN's coarse factorization must be numerically identical to the
     desktop-CUDA per-column plan (paper §3: same math, different units)."""
@@ -67,6 +68,7 @@ def test_paper_buffer_count_figure1():
     assert 2 * 3 * 4 == 24  # the naive per-cell allocation it replaces
 
 
+@pytest.mark.slow
 def test_grad_flows_through_all_plans(setup):
     cfg, params, x = setup
     labels = jnp.array([0, 1, 2, 3])

@@ -12,6 +12,9 @@ import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# multi-second integration sweeps: excluded from the quick loop (-m "not slow")
+pytestmark = pytest.mark.slow
+
 
 def run_in_devices(code: str) -> None:
     env = dict(os.environ)

@@ -23,6 +23,7 @@ def _params(cfg):
     return split(p)[0]
 
 
+@pytest.mark.slow
 def test_no_drop_matches_manual_dense_computation():
     """With no_drop, the capacity path must equal the direct dense formula
     sum_k w_k * expert_{e_k}(x)."""

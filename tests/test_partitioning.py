@@ -61,9 +61,10 @@ def test_partial_multi_axis_divisibility():
     r = rules(pod=2)
     # batch=32 divisible by pod*data=32 -> both axes
     assert r.spec_for(("batch",), (32,)) == P(("pod", "data"))
-    # batch=16 not divisible by 32 -> drop trailing axis, keep pod? No:
-    # ('pod','data') -> trailing dropped gives ('pod',), 16 % 2 == 0
-    assert r.spec_for(("batch",), (16,)) == P(("pod",))
+    # batch=16 not divisible by 32 -> drop trailing axis, keep pod:
+    # ('pod','data') -> trailing dropped gives ('pod',), 16 % 2 == 0,
+    # and spec_for unwraps singleton axis tuples to the bare axis name
+    assert r.spec_for(("batch",), (16,)) == P("pod")
 
 
 def test_constrain_is_noop_outside_context():

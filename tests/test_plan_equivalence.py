@@ -1,0 +1,66 @@
+"""All four execution plans are the SAME function (core/lstm docstring).
+
+Parametrized over plan x dtype x deliberately awkward shapes (odd batch,
+short prime-ish T, hidden sizes that do not divide the Pallas block sizes)
+so block padding, wavefront masking, and the sequence kernel's batch tiling
+are all exercised off the happy path.  ``forward_sequential`` is the oracle.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mobirnn_lstm import LSTMConfig
+from repro.core import lstm
+
+# (batch, seq_len, hidden, input_dim, n_layers) — none block-aligned
+SHAPES = [
+    (3, 7, 48, 9, 2),      # the issue's canonical odd shape
+    (1, 5, 33, 9, 3),      # B=1, hidden 33 (not even lane-aligned)
+    (5, 3, 16, 40, 2),     # input_dim > hidden: P = max(D, H) padding path
+]
+TOL = {"float32": dict(rtol=2e-5, atol=2e-5),
+       "bfloat16": dict(rtol=5e-2, atol=5e-2)}
+
+
+def _setup(shape, dtype):
+    b, t, h, d, n_layers = shape
+    cfg = dataclasses.replace(LSTMConfig(), hidden=h, input_dim=d,
+                              n_layers=n_layers, seq_len=t, dtype=dtype)
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, d),
+                          jnp.dtype(dtype))
+    return cfg, params, x
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "b{}t{}h{}d{}l{}"
+                         .format(*s))
+@pytest.mark.parametrize("plan", [n for n in lstm.FORWARD_PLANS
+                                  if n != "sequential"])
+def test_plan_matches_sequential(plan, shape, dtype):
+    cfg, params, x = _setup(shape, dtype)
+    want = lstm.forward_sequential(params, x, cfg)
+    got = lstm.FORWARD_PLANS[plan](params, x, cfg)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_plans_agree_under_jit_and_grad():
+    """The plans stay equivalent through jit and as loss_fn backends."""
+    cfg, params, x = _setup(SHAPES[0], "float32")
+    labels = jnp.array([0, 3, 5])
+    grads = []
+    for plan in ("sequential", "fused_seq"):
+        fwd = lstm.FORWARD_PLANS[plan]
+        loss, g = jax.jit(jax.value_and_grad(
+            lambda p: lstm.loss_fn(p, x, labels, cfg, forward=fwd)))(params)
+        grads.append((loss, g))
+    np.testing.assert_allclose(grads[0][0], grads[1][0], rtol=1e-5,
+                               atol=1e-5)
+    for a, b in zip(jax.tree.leaves(grads[0][1]),
+                    jax.tree.leaves(grads[1][1])):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

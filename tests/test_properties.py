@@ -1,8 +1,15 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+hypothesis is an OPTIONAL dev dependency (requirements-dev.txt); without it
+this module must skip at collection, not kill the whole tier-1 run.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import factorization as fz
 from repro.core import wavefront

@@ -121,6 +121,7 @@ def test_serving_engine_end_to_end():
     assert eng.pool.stats.checkouts == 2   # two waves
 
 
+@pytest.mark.slow
 def test_serving_engine_greedy_matches_manual_decode():
     """Engine output == manual prefill+greedy loop with the raw model."""
     from repro.configs import get_arch
