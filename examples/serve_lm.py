@@ -1,7 +1,11 @@
-"""Serving example: batched requests against a reduced qwen2 with the
-MobiRNN runtime policies — preallocated cache pools, coarse request waves,
-and load-aware plan dispatch under varying injected load (paper Fig 7, but
-for LLM decode).
+"""Serving example: a reduced qwen2 under the MobiRNN runtime policies —
+preallocated cache pools, load-aware plan dispatch (paper Fig 7, but for
+LLM decode) — comparing the two engines:
+
+  * wave (Engine):       lockstep batches, padded to the slowest request;
+  * slot (SlotEngine):   slot-resident continuous batching — per-lane
+                         admission/retirement over one preallocated cache,
+                         tokens streamed per tick.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -14,7 +18,17 @@ from repro.configs import get_arch
 from repro.core.scheduler import SyntheticLoadSensor
 from repro.models import registry
 from repro.partitioning import split
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, SlotEngine
+
+
+def make_requests(cfg, rng):
+    # ragged on purpose: mixed prompt lengths, 8x max_new spread — the
+    # workload where continuous batching beats waves
+    lens = [8, 12, 6, 16, 8, 12, 6, 16, 8, 12, 6, 16]
+    news = [2, 16, 4, 8, 16, 2, 8, 4, 16, 2, 4, 8]
+    return [Request(i, rng.integers(0, cfg.vocab, (l,)).astype(np.int32),
+                    max_new_tokens=n)
+            for i, (l, n) in enumerate(zip(lens, news))]
 
 
 def main() -> None:
@@ -23,24 +37,42 @@ def main() -> None:
     params, _ = split(model.init(jax.random.PRNGKey(0)))
     print(f"serving {cfg.name}: vocab={cfg.vocab} layers={cfg.n_layers}")
 
-    sensor = SyntheticLoadSensor(0.0)
-    engine = Engine(model, params, batch_size=4, max_seq=64,
-                    pool_capacity=2, sensor=sensor)
-
     rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab, (12,)).astype(np.int32),
-                    max_new_tokens=8) for i in range(12)]
+    reqs = make_requests(cfg, rng)
+    n_tok = sum(r.max_new_tokens for r in reqs)
+
+    sensor = SyntheticLoadSensor(0.0)
+    wave = Engine(model, params, batch_size=4, max_seq=64,
+                  pool_capacity=2, sensor=sensor)
+    slot = SlotEngine(model, params, n_slots=4, max_seq=64,
+                      queue_capacity=8, sensor=sensor)
+
+    wave.serve(reqs)                   # compile both engines once so the
+    slot.serve(reqs)                   # printed rows are steady-state
 
     for load in (0.0, 0.85):
         sensor.value = load
-        t0 = time.time()
-        results = engine.serve(reqs)
-        wall = time.time() - t0
-        n_tok = sum(r.tokens.shape[-1] for r in results)
-        plans = {p for r in results for p in r.plan_decisions}
-        print(f"load={load:.0%}: {len(results)} requests, {n_tok} tokens, "
-              f"{n_tok / wall:.1f} tok/s, plans used: {plans}")
-    print("state pool:", engine.pool.stats)
+        for name, engine in (("wave", wave), ("slot", slot)):
+            t0 = time.time()
+            results = engine.serve(reqs)
+            wall = time.time() - t0
+            plans = {p for r in results for p in r.plan_decisions}
+            print(f"load={load:.0%} {name}: {len(results)} requests, "
+                  f"{n_tok} tokens, {n_tok / wall:.1f} tok/s, "
+                  f"plans used: {plans}")
+
+    # streaming: tokens surface per tick, not when the whole batch drains
+    first_out = {}
+    t0 = time.time()
+
+    def on_token(ev):
+        first_out.setdefault(ev.uid, time.time() - t0)
+
+    slot.serve(reqs, on_token=on_token)
+    ttft = sorted(first_out.values())
+    print(f"slot streaming: median time-to-first-token "
+          f"{ttft[len(ttft) // 2] * 1e3:.1f}ms over {len(ttft)} requests")
+    print("resident pool:", slot.pool.stats)
 
 
 if __name__ == "__main__":

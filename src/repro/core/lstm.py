@@ -159,6 +159,35 @@ FORWARD_PLANS: dict[str, Callable] = {
 }
 
 
+def plan_viability(cfg: LSTMConfig, batch: int, seq_len: int, *,
+                   seq_plan_names: tuple[str, ...] = ("fused_seq",),
+                   dtype_bytes: int = 4, w_dtype_bytes: int | None = None,
+                   vmem_budget: int | None = None) -> Callable[[str], bool]:
+    """Viability predicate for ``Scheduler(viable=...)``.
+
+    The sequence-resident plan is only a real plan while
+    ``kernels/lstm_seq.choose_batch_block`` finds a batch tile whose whole
+    working set (stacked weights + T-resident input + state) fits VMEM;
+    past the budget ``forward_fused_seq`` silently reroutes to the per-cell
+    kernel, so calibrating or choosing it would just duplicate
+    ``fused_cell`` under a misleading name.  ``seq_plan_names`` lists the
+    scheduler names registered for the sequence-resident plan (benchmarks
+    register it as ``accel_seq``).  All other plan names are always viable.
+    """
+    from repro.kernels import lstm_seq as seq_lib
+
+    p_width = max(cfg.input_dim, cfg.hidden)
+    block = seq_lib.choose_batch_block(
+        batch, seq_len, cfg.n_layers, p_width, cfg.hidden,
+        dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+        w_dtype_bytes=w_dtype_bytes)
+
+    def viable(plan_name: str) -> bool:
+        return block is not None or plan_name not in seq_plan_names
+
+    return viable
+
+
 def loss_fn(params: dict, x: jax.Array, labels: jax.Array, cfg: LSTMConfig,
             forward: Callable = forward_sequential) -> jax.Array:
     logits = forward(params, x, cfg)

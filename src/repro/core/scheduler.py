@@ -96,17 +96,50 @@ class Decision:
 
 
 class Scheduler:
-    def __init__(self, sensor: LoadSensor):
+    """``viable`` is an optional predicate ``plan_name -> bool`` filtering
+    plans that cannot run at all on the current shapes (e.g. the
+    sequence-resident kernel past its VMEM budget,
+    kernels/lstm_seq.choose_batch_block -> None; see core/lstm.plan_viability
+    for the wiring).  Non-viable plans are never calibrated and never chosen
+    — calibrating one would waste a warm-up dispatch on a plan that only
+    ever runs its fallback path, and choosing one would silently benchmark
+    the fallback under the wrong name."""
+
+    #: decision-history bound: the slot engine calls choose() once per
+    #: decode tick for the engine's whole life, so an unbounded list would
+    #: be a slow host-memory leak on the serving hot loop
+    MAX_DECISIONS = 4096
+
+    def __init__(self, sensor: LoadSensor,
+                 viable: Callable[[str], bool] | None = None):
+        import collections
         self.sensor = sensor
+        self.viable = viable
         self.plans: dict[str, Plan] = {}
-        self.decisions: list[Decision] = []
+        self.decisions: collections.deque[Decision] = collections.deque(
+            maxlen=self.MAX_DECISIONS)
 
     def register(self, plan: Plan) -> None:
         self.plans[plan.name] = plan
 
-    def calibrate(self, *args, repeats: int = 3, **kwargs) -> None:
-        """Time each plan on representative inputs to seed base latencies."""
-        for plan in self.plans.values():
+    def _viable_plans(self, viable: Callable[[str], bool] | None
+                      ) -> dict[str, Plan]:
+        pred = self.viable if viable is None else viable
+        if pred is None:
+            return self.plans
+        out = {n: p for n, p in self.plans.items() if pred(n)}
+        if not out:
+            raise ValueError(
+                f"no viable plan among {sorted(self.plans)} — the viability "
+                "predicate rejected every registered plan")
+        return out
+
+    def calibrate(self, *args, repeats: int = 3,
+                  viable: Callable[[str], bool] | None = None,
+                  **kwargs) -> None:
+        """Time each viable plan on representative inputs to seed base
+        latencies; non-viable plans keep base_latency_s = inf."""
+        for plan in self._viable_plans(viable).values():
             best = float("inf")
             for _ in range(repeats):
                 t0 = time.perf_counter()
@@ -119,9 +152,11 @@ class Scheduler:
                 best = min(best, time.perf_counter() - t0)
             plan.base_latency_s = best
 
-    def choose(self, load: float | None = None) -> Decision:
+    def choose(self, load: float | None = None,
+               viable: Callable[[str], bool] | None = None) -> Decision:
         load = self.sensor.load() if load is None else load
-        preds = {n: p.predicted(load) for n, p in self.plans.items()}
+        preds = {n: p.predicted(load)
+                 for n, p in self._viable_plans(viable).items()}
         best = min(preds, key=preds.get)
         d = Decision(plan=best, load=load, predicted_s=preds)
         self.decisions.append(d)

@@ -2,15 +2,22 @@
 
 MobiRNN preallocates the (c, h) tensors once (their shapes are static given
 the model) and reuses them as cells retire, bounding live memory to
-2 x wavefront-width buffers.  The JAX realisation has two parts:
+2 x wavefront-width buffers.  The JAX realisation has three parts:
 
 1. ``StatePool`` — an allocation-free checkout/return pool over preallocated
    buffers, used by the serving engine for per-request decode state (KV
    caches, SSM states, LSTM (c,h)).  Checkout NEVER allocates once the pool
    is built; exhaustion raises (backpressure), exactly the bound the paper
-   enforces.
+   enforces.  ``give_back`` resets through a donated jit, so the returned
+   buffer is zeroed IN PLACE — ``stats.buffers_built`` stays at ``capacity``
+   for the life of the pool (asserted by tests/test_scheduler_state.py).
 2. ``donate`` — jit wrappers with ``donate_argnums`` on state arguments so
    XLA writes updated caches in place (no copy per decode step).
+3. Lane-granular helpers (``lane_write`` / ``lane_zero``) — slot-resident
+   continuous batching (serving/slots.py) treats one batch axis of a
+   pooled buffer as B independent lanes; retirement resets JUST that lane
+   through a donated jit instead of returning the whole buffer to the
+   pool.
 """
 from __future__ import annotations
 
@@ -33,6 +40,8 @@ class PoolStats:
     outstanding: int = 0
     high_water: int = 0
     checkouts: int = 0
+    resets: int = 0
+    buffers_built: int = 0        # must stay == capacity after __init__
     allocation_bytes: int = 0
 
 
@@ -41,11 +50,21 @@ class StatePool:
 
     def __init__(self, spec_tree: Any, capacity: int):
         self._spec = spec_tree
-        self._free: list[Any] = [make_buffer(spec_tree) for _ in range(capacity)]
+        self._free: list[Any] = []
+        self.stats = PoolStats(capacity=capacity)
+        for _ in range(capacity):
+            self._free.append(make_buffer(spec_tree))
+            self.stats.buffers_built += 1
         per_buf = int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize
                           for s in jax.tree.leaves(spec_tree)))
-        self.stats = PoolStats(capacity=capacity,
-                               allocation_bytes=per_buf * capacity)
+        self.stats.allocation_bytes = per_buf * capacity
+        # donated zeroing: XLA reuses the returned buffer's memory, so a
+        # give_back never grows the live-buffer population.  ``a * 0``
+        # (not zeros_like) keeps the input live in the computation —
+        # a pure-constant output would be DCE'd past the donation and
+        # freshly allocated instead of aliased in place.
+        self._reset = jax.jit(
+            lambda b: jax.tree.map(lambda a: a * 0, b), donate_argnums=0)
 
     def checkout(self) -> Any:
         if not self._free:
@@ -62,10 +81,37 @@ class StatePool:
 
     def give_back(self, buf: Any) -> None:
         # reset without allocating fresh storage: donation in the reset jit
-        self._free.append(jax.tree.map(lambda b: b * 0, buf))
+        self._free.append(self._reset(buf))
+        self.stats.resets += 1
         self.stats.outstanding -= 1
 
 
 def donate(fn: Callable, state_argnums: tuple[int, ...], **jit_kwargs):
     """jit with the state arguments donated — in-place cache updates."""
     return jax.jit(fn, donate_argnums=state_argnums, **jit_kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Lane-granular state ops (slot-resident continuous batching)
+# ---------------------------------------------------------------------------
+def lane_write(tree: Any, lane: Any, index: jax.Array, axis: int) -> Any:
+    """Write a width-1 ``lane`` slice into position ``index`` of ``axis``
+    on every leaf.  ``lane`` leaves must already carry the singleton axis
+    (e.g. a B=1 prefill cache scattered into lane i of a B-lane buffer)."""
+    return jax.tree.map(
+        lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), index, axis=axis),
+        tree, lane)
+
+
+def lane_zero(tree: Any, index: jax.Array, axis: int) -> Any:
+    """Zero one lane of every leaf (slot retirement) — the slot-granular
+    analogue of ``StatePool.give_back``'s whole-buffer reset; callers wrap
+    it in a donated jit (see ``donate`` / SlotManager) so only that lane is
+    rewritten, with no ``b * 0`` reallocation of the full pool buffer."""
+    return jax.tree.map(
+        lambda big: jax.lax.dynamic_update_slice_in_dim(
+            big, jnp.zeros_like(
+                jax.lax.dynamic_slice_in_dim(big, index, 1, axis=axis)),
+            index, axis=axis),
+        tree)

@@ -15,7 +15,7 @@ from repro.configs import get_arch
 from repro.core.scheduler import SyntheticLoadSensor
 from repro.models import registry
 from repro.partitioning import split
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, SlotEngine
 
 
 def main() -> None:
@@ -26,6 +26,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--engine", choices=("wave", "slot"), default="slot",
+                    help="wave = lockstep batches; slot = slot-resident "
+                         "continuous batching (default)")
     ap.add_argument("--load", type=float, default=0.0,
                     help="injected accelerator load in [0,1] (paper Fig 7)")
     ap.add_argument("--seed", type=int, default=0)
@@ -42,9 +45,16 @@ def main() -> None:
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
 
-    engine = Engine(model, params, batch_size=args.batch_size,
-                    max_seq=args.prompt_len + args.max_new + 1,
-                    sensor=SyntheticLoadSensor(args.load))
+    max_seq = args.prompt_len + args.max_new + 1
+    if args.engine == "slot":
+        engine = SlotEngine(model, params, n_slots=args.batch_size,
+                            max_seq=max_seq,
+                            queue_capacity=max(args.requests, 1),
+                            sensor=SyntheticLoadSensor(args.load))
+    else:
+        engine = Engine(model, params, batch_size=args.batch_size,
+                        max_seq=max_seq,
+                        sensor=SyntheticLoadSensor(args.load))
     t0 = time.time()
     results = engine.serve(reqs)
     wall = time.time() - t0

@@ -195,7 +195,11 @@ def _dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
 def decode_attention(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
                      cfg: ModelConfig) -> tuple[jax.Array, dict]:
     """One-token cached attention.  x: (B, 1, d); cache slot arrays
-    (B, S_c, Hkv, dh); pos: scalar absolute position of this token.
+    (B, S_c, Hkv, dh); pos: absolute position of this token — a scalar
+    (all lanes in lockstep, the wave engine) or a (B,) vector (each lane
+    at its own position, the slot-resident continuous-batching engine).
+    The scalar case is exactly the vector case with every lane equal, so
+    one code path serves both.
 
     GQA is computed in GROUPED form (q reshaped to (B, Hkv, group, dh)) so
     the kv cache is never expanded to Hq heads — materialising the repeat
@@ -206,16 +210,18 @@ def decode_attention(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     from repro.partitioning import constrain
 
     B = x.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))          # (B,)
     q, k, v = _qkv(p, x)                          # (B,1,h,dh)
-    q = common.apply_rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
-    k = common.apply_rope(k, jnp.full((B, 1), pos), cfg.rope_theta)
+    q = common.apply_rope(q, pos_b[:, None], cfg.rope_theta)
+    k = common.apply_rope(k, pos_b[:, None], cfg.rope_theta)
     s_c = cache["k"].shape[1]
     w = cfg.sliding_window or 0
-    slot = (pos % s_c) if w else pos
+    slot_b = (pos_b % s_c) if w else pos_b        # (B,) per-lane write slot
 
     def dus(name, val):
-        return jax.lax.dynamic_update_slice_in_dim(
-            cache[name], val.astype(cache[name].dtype), slot, axis=1)
+        tgt = cache[name]
+        return tgt.at[jnp.arange(B), slot_b].set(
+            val[:, 0].astype(tgt.dtype))
 
     if cfg.kv_quant:
         kq, ks = _quantize(k)
@@ -243,11 +249,11 @@ def decode_attention(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     idx = jnp.arange(s_c)
     if w:
         # slot j holds absolute position pos - ((pos - j) mod S_c)
-        slot_pos = pos - jnp.mod(pos - idx, s_c)
-        valid = slot_pos >= 0
+        slot_pos = pos_b[:, None] - jnp.mod(pos_b[:, None] - idx[None], s_c)
+        valid = slot_pos >= 0                     # (B, S_c)
     else:
-        valid = idx <= pos
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        valid = idx[None] <= pos_b[:, None]       # (B, S_c)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)        # (B,Hkv,g,S) f32
     if cfg.kv_quant:
         # fold v's dequant scales into the probabilities

@@ -344,7 +344,11 @@ def prefill(params, cfg: ModelConfig, cache, batch: dict
 def decode_step(params, cfg: ModelConfig, cache, batch: dict
                 ) -> tuple[jax.Array, dict]:
     """One decode step.  batch['tokens']: (B,) or (B,K) audio.
-    Returns (logits (B,[K,]vocab), updated cache)."""
+    Returns (logits (B,[K,]vocab), updated cache).
+
+    ``cache['pos']`` may be a scalar (lockstep waves) or a (B,) vector
+    (slot-resident continuous batching, serving/slots.py) — attention
+    handles both; rwkv/mamba state is positionless either way."""
     toks = batch["tokens"]
     if cfg.n_codebooks:
         x = jnp.zeros((toks.shape[0], 1, cfg.d_model), jnp.dtype(cfg.dtype))

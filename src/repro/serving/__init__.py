@@ -1,3 +1,6 @@
-from repro.serving.engine import Engine, Request, Result
+from repro.serving.engine import Engine, SlotEngine
+from repro.serving.slots import (QueueFull, Request, RequestQueue, Result,
+                                 Slot, SlotManager, TokenEvent)
 
-__all__ = ["Engine", "Request", "Result"]
+__all__ = ["Engine", "SlotEngine", "Request", "Result", "RequestQueue",
+           "QueueFull", "Slot", "SlotManager", "TokenEvent"]

@@ -1,23 +1,40 @@
-"""Batched serving engine with MobiRNN-style runtime policies.
+"""Serving engines with MobiRNN-style runtime policies.
 
-The three paper mechanisms are first-class here:
+The paper mechanisms are first-class here:
   * preallocated state pools (core/state.StatePool) — decode caches are
-    checked out per batch wave and returned after; no allocation on the
+    built once and reset in place through donated jits; no allocation on the
     serving path, pool exhaustion = explicit backpressure;
-  * load-aware dispatch (core/scheduler.Scheduler) — multiple execution
-    plans (e.g. fused-kernel vs baseline decode step) are registered and the
-    predicted-fastest under current load runs each wave (paper Fig 7);
-  * coarse batching — requests are packed into fixed-shape waves (the
-    work-unit coarsening rule applied to requests; ragged tails are padded).
+  * load-aware dispatch (core/scheduler.Scheduler) — multiple decode plans
+    are registered and the predicted-fastest under current load runs each
+    tick (paper Fig 7);
+  * fixed-shape batching — the decode step has one shape for the life of
+    the engine.
 
-The engine is modality-generic: it serves any registry.Model whose config
-family is text-like (dense/moe/ssm/hybrid/vlm/audio all decode token ids).
+Two engines share that substrate:
+
+``Engine`` — the coarse WAVE engine: requests are packed into lockstep
+waves of ``batch_size``; every request pads to the longest prompt and the
+longest ``max_new_tokens`` in its wave.  Short waves are padded with
+zero-length dummy requests (an inactive lane, not a duplicated real
+request).  Kept as the baseline the benchmarks compare against.
+
+``SlotEngine`` — slot-resident CONTINUOUS batching (serving/slots.py): the
+batch axis is B independent slots over one preallocated cache; requests are
+admitted from a bounded queue into free slots at step granularity, decode
+runs one fused masked step across all lanes per tick, and retirement resets
+just that lane and immediately admits the next request.  Tokens stream out
+per tick (``stream``/``on_token``) instead of arriving all at once.  This
+is the engine the ROADMAP's heavy-traffic north star builds on.
+
+Both engines are modality-generic: they serve any registry.Model whose
+config family is text-like (dense/moe/ssm/hybrid/vlm/audio all decode
+token ids).
 """
 from __future__ import annotations
 
-import dataclasses
+import collections
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -27,29 +44,17 @@ from repro.core.scheduler import Plan, Scheduler, SyntheticLoadSensor
 from repro.core.state import StatePool
 from repro.models.registry import Model
 from repro.partitioning import split
+from repro.serving.slots import (QueueFull, Request, RequestQueue, Result,
+                                 SlotManager, TokenEvent)
 from repro import steps as steps_lib
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray               # (S,) int32 (or (K,S) for audio)
-    max_new_tokens: int = 16
+class _EngineBase:
+    """Shared substrate: cache pool, prefill jit, decode-plan scheduler."""
 
-
-@dataclasses.dataclass
-class Result:
-    uid: int
-    tokens: np.ndarray
-    prefill_s: float
-    decode_s: float
-    plan_decisions: list[str]
-
-
-class Engine:
-    def __init__(self, model: Model, params: Any, *, batch_size: int = 4,
-                 max_seq: int = 128, pool_capacity: int = 2,
-                 sensor=None, extra_plans: dict[str, Callable] | None = None):
+    def __init__(self, model: Model, params: Any, *, batch_size: int,
+                 max_seq: int, pool_capacity: int, sensor,
+                 extra_plans: dict[str, Callable] | None, per_lane_pos: bool):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -59,24 +64,66 @@ class Engine:
         cache_annot = jax.eval_shape(
             lambda: model.init_cache(batch_size, max_seq))
         cache_abs, _ = split(cache_annot)
+        if per_lane_pos:
+            # continuous batching: each lane decodes at its own position
+            cache_abs = dict(cache_abs, pos=jax.ShapeDtypeStruct(
+                (batch_size,), jnp.int32))
         self.pool = StatePool(cache_abs, capacity=pool_capacity)
 
+        # shape-polymorphic: the same jit serves (B, S) wave prefills and
+        # (1, S) per-slot admission prefills (one compile per shape)
         self._prefill = jax.jit(
             lambda p, c, b: steps_lib.prefill_step(self.cfg, p, c, b),
             donate_argnums=(1,))
-        base_decode = jax.jit(
-            lambda p, c, b: steps_lib.decode_step(self.cfg, p, c, b),
-            donate_argnums=(1,))
 
         self.scheduler = Scheduler(sensor or SyntheticLoadSensor(0.0))
-        self.scheduler.register(Plan("decode/base", base_decode,
-                                     shared=True))
-        for name, fn in (extra_plans or {}).items():
-            self.scheduler.register(Plan(name, jax.jit(fn,
-                                                       donate_argnums=(1,)),
-                                         shared=True))
+        for name, fn in self._decode_plans(extra_plans or {}).items():
+            self.scheduler.register(
+                Plan(name, jax.jit(fn, donate_argnums=(1,)), shared=True))
+
+    def _decode_plans(self, extra: dict[str, Callable]
+                      ) -> dict[str, Callable]:
+        raise NotImplementedError
+
+    def _prefill_batch(self, toks: np.ndarray) -> dict:
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.n_vis_tokens:
+            batch["vis_embeds"] = jnp.zeros(
+                (toks.shape[0], self.cfg.n_vis_tokens, self.cfg.vis_dim),
+                jnp.dtype(self.cfg.dtype))
+        return batch
+
+
+# ---------------------------------------------------------------------------
+# Wave engine (baseline)
+# ---------------------------------------------------------------------------
+class Engine(_EngineBase):
+    """Lockstep wave engine — the coarse-batching baseline."""
+
+    def __init__(self, model: Model, params: Any, *, batch_size: int = 4,
+                 max_seq: int = 128, pool_capacity: int = 2,
+                 sensor=None, extra_plans: dict[str, Callable] | None = None):
+        super().__init__(model, params, batch_size=batch_size,
+                         max_seq=max_seq, pool_capacity=pool_capacity,
+                         sensor=sensor, extra_plans=extra_plans,
+                         per_lane_pos=False)
+
+    def _decode_plans(self, extra: dict[str, Callable]
+                      ) -> dict[str, Callable]:
+        plans = {"decode/base":
+                 lambda p, c, b: steps_lib.decode_step(self.cfg, p, c, b)}
+        plans.update(extra)
+        return plans
 
     # ------------------------------------------------------------------
+    def _dummy_request(self) -> Request:
+        """Zero-length, zero-token filler for ragged wave tails — an
+        inactive lane, NOT a duplicate of a real request."""
+        shape = ((self.cfg.n_codebooks, 0) if self.cfg.n_codebooks
+                 else (0,))
+        return Request(uid=-1, prompt=np.zeros(shape, np.int32),
+                       max_new_tokens=0)
+
     def _pad_prompts(self, reqs: list[Request]) -> tuple[np.ndarray, int]:
         lens = [r.prompt.shape[-1] for r in reqs]
         s = max(lens)
@@ -93,21 +140,14 @@ class Engine:
         for i in range(0, len(requests), self.batch_size):
             wave = requests[i:i + self.batch_size]
             pad = self.batch_size - len(wave)
-            wave_padded = wave + [wave[-1]] * pad
+            wave_padded = wave + [self._dummy_request()] * pad
             results.extend(self._serve_wave(wave_padded)[: len(wave)])
         return results
 
     def _serve_wave(self, reqs: list[Request]) -> list[Result]:
         cache = self.pool.checkout()
-        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype)
-                             if not hasattr(s, "addressable_data") else s,
-                             cache)
-        toks, s0 = self._pad_prompts(reqs)
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.n_vis_tokens:
-            batch["vis_embeds"] = jnp.zeros(
-                (self.batch_size, self.cfg.n_vis_tokens, self.cfg.vis_dim),
-                jnp.dtype(self.cfg.dtype))
+        toks, _ = self._pad_prompts(reqs)
+        batch = self._prefill_batch(toks)
 
         t0 = time.perf_counter()
         logits, cache = jax.block_until_ready(
@@ -133,6 +173,218 @@ class Engine:
         t_decode = time.perf_counter() - t0
         self.pool.give_back(cache)
 
-        gen = np.stack(outs, axis=-1)          # (B, [K,] max_new)
-        return [Result(r.uid, gen[j], t_prefill, t_decode, decisions)
+        # (B, [K,] max_new); toks[..., :0] covers an all-zero-budget wave
+        gen = (np.stack(outs, axis=-1) if outs else toks[..., :0])
+        return [Result(r.uid, gen[j, ..., :r.max_new_tokens], t_prefill,
+                       t_decode, decisions)
                 for j, r in enumerate(reqs)]
+
+
+# ---------------------------------------------------------------------------
+# Slot engine (continuous batching)
+# ---------------------------------------------------------------------------
+class SlotEngine(_EngineBase):
+    """Slot-resident continuous batching (see serving/slots.py docstring).
+
+    Greedy outputs are token-identical to an unpadded per-request reference
+    (the wave engine at batch_size=1): admission prefills each prompt at
+    its exact length through a B=1 scratch cache, and lanes never interact
+    — per-lane positions keep attention exact, and rwkv/mamba/MoE-decode
+    paths are lane-independent by construction.  Distinct prompt lengths
+    compile distinct prefill executables (bucket upstream if that matters).
+    """
+
+    def __init__(self, model: Model, params: Any, *, n_slots: int = 4,
+                 max_seq: int = 128, queue_capacity: int = 16,
+                 sensor=None, extra_plans: dict[str, Callable] | None = None,
+                 clock: Callable[[], float] = None):
+        super().__init__(model, params, batch_size=n_slots, max_seq=max_seq,
+                         pool_capacity=1, sensor=sensor,
+                         extra_plans=extra_plans, per_lane_pos=True)
+        self.n_slots = n_slots
+        self.clock = clock or time.monotonic
+        self.queue = RequestQueue(queue_capacity, clock=self.clock)
+        # completed Results land here until the caller consumes them with
+        # take_finished() — long-running submit()/stream() users must drain
+        # it, or host memory grows with every retired request
+        self.finished: dict[int, Result] = {}
+        # B=1 scratch the admission prefill runs through (donated each
+        # admission, so it is ONE buffer for the life of the engine).
+        # The jit zeroes it in place first — rwkv/mamba prefill consumes
+        # the cache as its initial state, so a previous occupant's state
+        # must not leak into the next prompt — then samples the prompt's
+        # first greedy token, all in one dispatch.
+        scratch_abs, _ = split(jax.eval_shape(
+            lambda: model.init_cache(1, max_seq)))
+        self._scratch_pool = StatePool(scratch_abs, capacity=1)
+        self._scratch = self._scratch_pool.checkout()
+
+        def prefill_sample(p, c, b):
+            c = jax.tree.map(lambda a: a * 0, c)
+            logits, c = steps_lib.prefill_step(self.cfg, p, c, b)
+            return steps_lib.greedy_sample(logits)[..., 0], c
+
+        self._prefill_sample = jax.jit(prefill_sample, donate_argnums=(1,))
+        self.manager = SlotManager(
+            self.pool.checkout(), n_slots,
+            token_tail=((self.cfg.n_codebooks,) if self.cfg.n_codebooks
+                        else ()),
+            clock=self.clock)
+
+    def _decode_plans(self, extra: dict[str, Callable]
+                      ) -> dict[str, Callable]:
+        # every plan is wrapped with the active-mask select (free/finished
+        # lanes keep their state untouched) AND greedy sampling, so one
+        # dispatch per tick yields (sampled tokens, cache) directly
+        def masked(fn=None):
+            def plan(p, c, b):
+                step = None if fn is None else (
+                    lambda _cfg, p_, c_, b_: fn(p_, c_, b_))
+                logits, cache = steps_lib.masked_decode_step(
+                    self.cfg, p, c, b, step_fn=step)
+                return steps_lib.greedy_sample(logits), cache
+            return plan
+
+        plans = {"decode/base": masked()}
+        plans.update({n: masked(fn) for n, fn in extra.items()})
+        return plans
+
+    # ------------------------------------------------------------------
+    def _validate(self, req: Request) -> None:
+        """Reject requests that cannot fit their lane BEFORE they queue —
+        decode writes token ``i`` at position prompt_len + i, and an
+        out-of-range lane scatter would be silently dropped, not clamped."""
+        if req.max_new_tokens <= 0:
+            return                        # completes without touching a lane
+        s = np.asarray(req.prompt).shape[-1]
+        if not 0 < s <= self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt length {s} outside (0, "
+                f"{self.max_seq}]")
+        if s + req.max_new_tokens - 1 > self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt {s} + max_new_tokens "
+                f"{req.max_new_tokens} - 1 exceeds max_seq {self.max_seq}")
+
+    def submit(self, req: Request) -> None:
+        """Queue one request; raises QueueFull (backpressure) when bounded
+        queue capacity is reached, ValueError when it cannot fit a lane."""
+        self._validate(req)
+        self.queue.submit(req)
+
+    def _admit_one(self, index: int, req: Request) -> TokenEvent:
+        prompt = np.asarray(req.prompt, np.int32)
+        t0 = time.perf_counter()
+        tok0, self._scratch = self._prefill_sample(
+            self.params, self._scratch,
+            self._prefill_batch(prompt.reshape((1,) + prompt.shape)))
+        tok0 = tok0[0]                       # () or (K,), device array
+        self.manager.admit(index, req, self._scratch, tok0,
+                           time.perf_counter() - t0)
+        return TokenEvent(req.uid, np.asarray(tok0, np.int32), 0,
+                          done=(req.max_new_tokens <= 1))
+
+    def _expired_event(self, req: Request) -> TokenEvent:
+        return TokenEvent(req.uid, None, 0, done=True,
+                          finish_reason="deadline")
+
+    def stream(self, requests: list[Request] | None = None
+               ) -> Iterator[TokenEvent]:
+        """Run the continuous-batching loop, yielding one TokenEvent per
+        generated token (plus terminal events), until queue and slots
+        drain.  ``requests`` are fed into the bounded queue as space frees
+        — external callers use ``submit`` and get backpressure instead.
+
+        Results are published through ``self.finished`` as slots retire.
+        """
+        for req in requests or []:
+            self._validate(req)          # fail fast, not mid-stream
+        pending = collections.deque(requests or [])
+        mgr = self.manager
+        while pending or len(self.queue) or mgr.any_occupied:
+            now = self.clock()
+
+            def refill_and_expire():
+                """Top the queue up from `pending`, then drop anything whose
+                deadline already passed — every pop below sees an expired-
+                free queue, including mid-admission refills."""
+                while pending and not self.queue.full:
+                    self.queue.submit(pending.popleft())
+                for req in self.queue.expire(now):
+                    self.finished[req.uid] = Result(
+                        req.uid, mgr.empty_tokens(), 0.0, 0.0, [],
+                        finish_reason="deadline")
+                    yield self._expired_event(req)
+
+            yield from refill_and_expire()
+            # resident lanes past their deadline retire with what they have
+            for idx in mgr.expired_indices(now):
+                res = mgr.retire(idx, finish_reason="deadline")
+                self.finished[res.uid] = res
+                yield TokenEvent(res.uid, None, res.tokens.shape[-1],
+                                 done=True, finish_reason="deadline")
+
+            # step-granular admission into free slots
+            for idx in mgr.free_indices():
+                yield from refill_and_expire()
+                req = self.queue.pop()
+                if req is None:
+                    break
+                if req.max_new_tokens <= 0:
+                    # zero-budget request: complete without touching a lane
+                    self.finished[req.uid] = Result(
+                        req.uid, mgr.empty_tokens(), 0.0, 0.0, [])
+                    yield TokenEvent(req.uid, None, 0, done=True,
+                                     finish_reason="length")
+                    continue
+                ev = self._admit_one(idx, req)
+                yield ev
+                if ev.done:
+                    res = mgr.retire(idx)
+                    self.finished[res.uid] = res
+
+            if not mgr.active_mask().any():
+                if pending or len(self.queue):
+                    continue   # only expiries/zero-token admissions left
+                break
+
+            # ONE fused masked decode tick across all lanes
+            d = self.scheduler.choose()
+            plan = self.scheduler.plans[d.plan]
+            t0 = time.perf_counter()
+            sampled_dev, mgr.cache = plan.fn(self.params, mgr.cache,
+                                             mgr.tick_batch())
+            mgr.set_sampled(sampled_dev)
+            sampled = np.asarray(sampled_dev)   # blocks; one copy per tick
+            plan.observe(time.perf_counter() - t0, d.load)
+
+            just_active = [s.index for s in mgr.slots
+                           if s.occupied and s.remaining > 0]
+            done_idx = set(mgr.record(sampled, d.plan))
+            for idx in just_active:
+                s = mgr.slots[idx]
+                yield TokenEvent(s.request.uid, np.asarray(sampled[idx],
+                                                           np.int32),
+                                 len(s.tokens) - 1, done=idx in done_idx)
+            for idx in done_idx:
+                res = mgr.retire(idx)
+                self.finished[res.uid] = res
+
+    def take_finished(self) -> dict[int, Result]:
+        """Pop and return every completed Result (uid -> Result).  The
+        consumption half of the streaming API: call it periodically from a
+        long-running submit()/stream() loop to keep host memory bounded."""
+        out, self.finished = self.finished, {}
+        return out
+
+    def serve(self, requests: list[Request],
+              on_token: Callable[[TokenEvent], None] | None = None
+              ) -> list[Result]:
+        """Convenience wrapper: stream everything, return per-request
+        Results in submission order."""
+        self.finished = {}
+        for ev in self.stream(requests):
+            if on_token is not None:
+                on_token(ev)
+        done = self.take_finished()
+        return [done[r.uid] for r in requests]

@@ -71,5 +71,34 @@ def decode_step(cfg: ModelConfig, params: Any, cache: Any, batch: dict
     return transformer.decode_step(params, cfg, cache, batch)
 
 
+def masked_decode_step(cfg: ModelConfig, params: Any, cache: Any,
+                       batch: dict, step_fn: Any = None
+                       ) -> tuple[jax.Array, Any]:
+    """One fused decode tick across B slots honouring a per-slot active mask.
+
+    ``batch['active']`` is a (B,) bool mask; ``cache['pos']`` must be the
+    per-lane (B,) vector form.  Inactive lanes (free slots, finished
+    requests) still ride through the fixed-shape computation — that is the
+    point: ONE dispatch per tick regardless of occupancy — but their cache
+    slices and position counters are reselected from the input cache, so a
+    dead lane is semantically a no-op and its logits are garbage the caller
+    must ignore.  ``step_fn`` defaults to ``decode_step``; alternate decode
+    plans are wrapped the same way by the serving engine.
+    """
+    step = step_fn or decode_step
+    active = batch["active"]
+    logits, new_cache = step(cfg, params, cache,
+                             {k: v for k, v in batch.items() if k != "active"})
+
+    def sel(new, old):
+        # cache slot leaves are (n_groups, B, ...): batch axis is 1
+        m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(m, new, old)
+
+    slots = jax.tree.map(sel, new_cache["slots"], cache["slots"])
+    pos = jnp.where(active, new_cache["pos"], cache["pos"])
+    return logits, {"pos": pos, "slots": slots}
+
+
 def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)

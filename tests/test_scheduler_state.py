@@ -51,6 +51,53 @@ def test_proc_sensor_in_range():
 
 
 # ---------------------------------------------------------------------------
+# Viability filtering (ROADMAP: schedule from the VMEM model, not just EMA)
+# ---------------------------------------------------------------------------
+def test_viability_filters_choose():
+    s = _sched()                      # accel would win at low load...
+    s.viable = lambda name: name != "accel"
+    assert s.choose(load=0.0).plan == "cpu"   # ...but it is not viable
+
+
+def test_viability_never_calibrates_nonviable():
+    calls = []
+    s = Scheduler(SyntheticLoadSensor(0.0),
+                  viable=lambda name: name == "cpu")
+    s.register(Plan("accel", lambda: calls.append("accel"), shared=True))
+    s.register(Plan("cpu", lambda: calls.append("cpu"), shared=False))
+    s.calibrate(repeats=1)
+    assert calls == ["cpu"]
+    assert s.plans["accel"].base_latency_s == float("inf")
+
+
+def test_viability_rejecting_everything_raises():
+    s = _sched()
+    with pytest.raises(ValueError, match="no viable plan"):
+        s.choose(load=0.0, viable=lambda name: False)
+
+
+def test_plan_viability_from_vmem_model():
+    """kernels/lstm_seq.choose_batch_block wires into Scheduler(viable=...):
+    past the VMEM budget the sequence-resident plan is filtered out."""
+    from repro.configs import MOBIRNN_LSTM
+    from repro.core import lstm
+
+    cfg = MOBIRNN_LSTM
+    fits = lstm.plan_viability(cfg, 8, cfg.seq_len)
+    assert fits("fused_seq") and fits("fused_cell") and fits("sequential")
+    tiny = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=1024)
+    assert not tiny("fused_seq")
+    assert tiny("fused_cell") and tiny("sequential")  # fallbacks stay
+
+    s = Scheduler(SyntheticLoadSensor(0.0), viable=tiny)
+    s.register(Plan("fused_seq", lambda: None, base_latency_s=0.001,
+                    shared=True))
+    s.register(Plan("fused_cell", lambda: None, base_latency_s=0.01,
+                    shared=True))
+    assert s.choose(load=0.0).plan == "fused_cell"
+
+
+# ---------------------------------------------------------------------------
 def _spec():
     return {"c": jax.ShapeDtypeStruct((2, 4), jnp.float32),
             "h": jax.ShapeDtypeStruct((2, 4), jnp.float32)}
@@ -86,3 +133,31 @@ def test_pool_returns_zeroed_buffers():
 def test_pool_allocation_accounting():
     pool = StatePool(_spec(), capacity=4)
     assert pool.stats.allocation_bytes == 4 * 2 * (2 * 4 * 4)
+
+
+def test_give_back_resets_without_allocating():
+    """Regression: give_back used to run ``b * 0`` per return — a fresh
+    buffer per cycle despite the 'reset without allocating' docstring.  The
+    reset now goes through a donated jit: the returned buffer is zeroed in
+    place, the caller's handle is invalidated, and the pool never builds a
+    buffer after __init__."""
+    pool = StatePool(_spec(), capacity=1)
+    for cycle in range(5):
+        buf = pool.checkout()
+        buf = {k: v + 7.0 for k, v in buf.items()}
+        leaves = jax.tree.leaves(buf)
+        pool.give_back(buf)
+        # donation invalidated the returned handle — in-place reset
+        assert all(leaf.is_deleted() for leaf in leaves), cycle
+    assert pool.stats.buffers_built == 1        # no growth in live buffers
+    assert pool.stats.resets == 5
+
+
+def test_lane_zero_zeroes_single_lane():
+    from repro.core.state import donate, lane_zero
+
+    tree = {"c": jnp.ones((3, 2, 4)), "h": jnp.ones((3, 2, 4))}
+    reset = donate(lambda t, i: lane_zero(t, i, axis=1), (0,))
+    out = reset(tree, jnp.asarray(1, jnp.int32))
+    assert float(jnp.sum(out["c"][:, 1])) == 0.0
+    assert float(jnp.sum(out["c"][:, 0])) == 3 * 4     # untouched lane
