@@ -79,15 +79,19 @@ def bench_fig3_factorization() -> None:
 
 def bench_fig2_dispatch_counts() -> None:
     """Fig 2/3's real lever, measured at the jaxpr level: kernel dispatches
-    per forward.  The per-cell fused plan launches one pallas_call per cell
-    per step (O(T*L)); the sequence-resident plan (kernels/lstm_seq.py)
-    launches exactly ONE regardless of T."""
-    from repro.analysis import count_kernel_dispatches
+    per forward AND per training step.  The per-cell fused plan launches one
+    pallas_call per cell per step (O(T*L), and its VJP unrolls to O(T*L)
+    again); the sequence-resident plan (kernels/lstm_seq.py +
+    lstm_seq_bwd.py) launches exactly ONE forward and, under
+    ``value_and_grad``, one forward + one reverse-sweep — O(1) in T both
+    ways."""
+    from repro.analysis import count_kernel_dispatches, count_train_dispatches
 
     for T in (32, 128, 512):
         cfg = MOBIRNN_LSTM
         params = lstm.init_params(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (2, T, cfg.input_dim))
+        labels = jnp.zeros((2,), jnp.int32)
         n_cell = count_kernel_dispatches(jax.make_jaxpr(
             lambda p, x: lstm.forward_fused_kernel(p, x, cfg))(params, x))
         n_seq = count_kernel_dispatches(jax.make_jaxpr(
@@ -96,6 +100,18 @@ def bench_fig2_dispatch_counts() -> None:
             f"pallas_calls={n_cell} (O(T*L))")
         row(f"fig2/dispatch_fused_seq_T{T}", float(n_seq),
             f"pallas_calls={n_seq} (O(1) in T)")
+        t_cell = count_train_dispatches(
+            lambda p: lstm.loss_fn(p, x, labels, cfg,
+                                   forward=lstm.forward_fused_kernel),
+            params)
+        t_seq = count_train_dispatches(
+            lambda p: lstm.loss_fn(p, x, labels, cfg,
+                                   forward=lstm.forward_fused_seq),
+            params)
+        row(f"fig2/train_dispatch_fused_cell_T{T}", float(t_cell),
+            f"pallas_calls={t_cell} (fwd+bwd, O(T*L))")
+        row(f"fig2/train_dispatch_fused_seq_T{T}", float(t_seq),
+            f"pallas_calls={t_seq} (1 fwd + 1 bwd, O(1) in T)")
 
     # wall time of the two kernel plans at the paper's default shape
     cfg = MOBIRNN_LSTM
@@ -148,6 +164,40 @@ def bench_fig6_multithread() -> None:
         f"mt_cpu_gets={t_gpu / t_mt:.0%} of gpu perf (paper: >=70%)")
 
 
+def bench_train_step() -> None:
+    """Train-step wall time per execution plan — the training story the
+    fused backward kernel unlocks: with ``fused_seq`` the whole
+    ``value_and_grad`` is 2 Pallas dispatches instead of an O(T*L) oracle
+    replay.  Viability of the fused plan's BACKWARD working set is checked
+    via plan_viability(train=True) and noted in the derived column."""
+    from repro.optim import AdamW
+
+    cfg = MOBIRNN_LSTM.with_complexity(32, 2)
+    B, T = 8, 32
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.input_dim))
+    labels = jnp.zeros((B,), jnp.int32)
+    opt = AdamW(lr=1e-3)
+    viable = lstm.plan_viability(cfg, B, T, train=True)
+    base = None
+    for name, fwd in lstm.FORWARD_PLANS.items():
+        state = opt.init(params)
+
+        @jax.jit
+        def step(p, s, fwd=fwd):
+            loss, grads = jax.value_and_grad(lstm.loss_fn)(
+                p, x, labels, cfg, forward=fwd)
+            p, s, _ = opt.update(grads, s, p)
+            return p, s, loss
+
+        t = timeit(step, params, state, repeats=2)
+        base = base or t
+        note = f"speedup_vs_sequential={base / t:.2f}x"
+        if name == "fused_seq":
+            note += f",bwd_viable={viable('fused_seq')}"
+        row(f"train/step_{name}_B{B}_T{T}", t, note)
+
+
 def bench_fig7_load() -> None:
     cfg = MOBIRNN_LSTM
     params = lstm.init_params(jax.random.PRNGKey(0), cfg)
@@ -159,9 +209,12 @@ def bench_fig7_load() -> None:
     sensor = SyntheticLoadSensor(0.0)
     # VMEM-model viability: never calibrate/choose the sequence-resident
     # plan when choose_batch_block says it cannot fit (it would silently
-    # benchmark its fused_cell fallback under the wrong name)
+    # benchmark its fused_cell fallback under the wrong name).  This is the
+    # INFERENCE dispatch bench, so the forward working set (train=False) is
+    # the right gate; a train-time scheduler passes train=True to size the
+    # ~3x backward working set instead (see bench_train_step).
     sched = Scheduler(sensor, viable=lstm.plan_viability(
-        cfg, 1, cfg.seq_len, seq_plan_names=("accel_seq",)))
+        cfg, 1, cfg.seq_len, seq_plan_names=("accel_seq",), train=False))
     sched.register(Plan("accel", accel, shared=True, sensitivity=1.0))
     sched.register(Plan("accel_seq", accel_seq, shared=True,
                         sensitivity=1.0))
@@ -317,6 +370,18 @@ def bench_moe_capacity() -> None:
             f"drop_frac={float(aux['moe_drop_frac']):.3f}")
 
 
+def write_json(path: str) -> None:
+    """Machine-readable benchmark rows (fig2 fwd+bwd dispatch counts,
+    train-step wall time per plan, serving tokens/sec live in `derived`) so
+    the perf trajectory is diffable across PRs."""
+    import json
+
+    with open(path, "w") as fh:
+        json.dump([{"name": n, "us_per_call": us, "derived": d}
+                   for n, us, d in ROWS], fh, indent=1)
+    print(f"wrote {len(ROWS)} rows to {path}")
+
+
 def main() -> None:
     import argparse
 
@@ -324,24 +389,33 @@ def main() -> None:
     ap.add_argument("--serving", action="store_true",
                     help="run only the serving throughput benchmark "
                          "(wave vs slot engine; the CI smoke invocation)")
+    ap.add_argument("--train", action="store_true",
+                    help="run only the per-plan train-step benchmark")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as JSON (e.g. BENCH_PR3.json) "
+                         "for cross-PR perf tracking")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     if args.serving:
         bench_serving()
-        print(f"\n{len(ROWS)} benchmarks complete")
-        return
-    bench_fig2_dispatch_counts()
-    bench_fig3_factorization()
-    bench_fig4_speedup()
-    bench_fig5_complexity()
-    bench_fig6_multithread()
-    bench_fig7_load()
-    bench_serving()
-    bench_kernels()
-    bench_wkv_chunks()
-    bench_moe_capacity()
+    elif args.train:
+        bench_train_step()
+    else:
+        bench_fig2_dispatch_counts()
+        bench_fig3_factorization()
+        bench_fig4_speedup()
+        bench_fig5_complexity()
+        bench_fig6_multithread()
+        bench_train_step()
+        bench_fig7_load()
+        bench_serving()
+        bench_kernels()
+        bench_wkv_chunks()
+        bench_moe_capacity()
     print(f"\n{len(ROWS)} benchmarks complete")
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -2,8 +2,14 @@
 convergence (a few hundred steps) and reproduce the §4 evaluation protocol
 (latency over 100 test cases, per-plan).
 
+Training runs under any of the four registered execution plans
+(core/lstm.FORWARD_PLANS) via ``--plan`` — with ``fused_seq`` the whole
+``value_and_grad`` lowers to TWO Pallas dispatches (one trajectory-emitting
+forward + one reverse-sweep BPTT kernel), and the latency table sweeps ALL
+registered plans so the Fig 4 comparison covers the Pallas plans too.
+
   PYTHONPATH=src python examples/train_har.py --steps 300 --hidden 32 \
-      --layers 2
+      --layers 2 --plan fused_seq
 """
 import argparse
 import time
@@ -25,11 +31,25 @@ def main() -> None:
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--plan", default="sequential",
+                    choices=sorted(lstm.FORWARD_PLANS),
+                    help="execution plan for the TRAINING step "
+                         "(core/lstm.FORWARD_PLANS; all are numerically "
+                         "equivalent — fused_seq is the single-dispatch "
+                         "MobiRNN fast path, forward and backward)")
+    ap.add_argument("--latency-cases", type=int, default=100,
+                    help="cases for the paper §4.1 latency protocol "
+                         "(0 skips it — the CI smoke setting)")
+    ap.add_argument("--n-train", type=int, default=7352,
+                    help="synthetic train windows (UCI HAR protocol size)")
+    ap.add_argument("--n-test", type=int, default=2947)
     args = ap.parse_args()
 
+    forward = lstm.FORWARD_PLANS[args.plan]
     cfg = LSTMConfig().with_complexity(args.hidden, args.layers)
-    print(f"config: {cfg.name} ({cfg.n_layers}L x {cfg.hidden}H)")
-    train, test = har.make_har()
+    print(f"config: {cfg.name} ({cfg.n_layers}L x {cfg.hidden}H) "
+          f"plan={args.plan}")
+    train, test = har.make_har(args.n_train, args.n_test)
     print(f"data: {len(train.y)} train / {len(test.y)} test windows "
           f"(UCI HAR protocol)")
 
@@ -40,45 +60,49 @@ def main() -> None:
 
     @jax.jit
     def step(params, state, x, y):
-        loss, grads = jax.value_and_grad(lstm.loss_fn)(params, x, y, cfg)
+        loss, grads = jax.value_and_grad(lstm.loss_fn)(params, x, y, cfg,
+                                                       forward=forward)
         params, state, m = opt.update(grads, state, params)
         return params, state, loss, m["grad_norm"]
 
-    it = har.batches(train, args.batch, seed=0)
+    # a batch larger than the train set would make har.batches yield nothing
+    it = har.batches(train, min(args.batch, len(train.y)), seed=0)
     t0 = time.time()
+    n_eval = min(512, len(test.y))
     for i in range(1, args.steps + 1):
         bx, by = next(it)
         params, state, loss, gn = step(params, state, jnp.asarray(bx),
                                        jnp.asarray(by))
         if i % 50 == 0 or i == 1:
-            acc = lstm.accuracy(params, jnp.asarray(test.x[:512]),
-                                jnp.asarray(test.y[:512]), cfg)
+            acc = lstm.accuracy(params, jnp.asarray(test.x[:n_eval]),
+                                jnp.asarray(test.y[:n_eval]), cfg,
+                                forward=forward)
             print(f"step {i:4d} loss {float(loss):.4f} "
                   f"test_acc {float(acc):.1%} "
                   f"({time.time() - t0:.0f}s)")
 
     acc = lstm.accuracy(params, jnp.asarray(test.x), jnp.asarray(test.y),
-                        cfg)
+                        cfg, forward=forward)
     print(f"\nfinal test accuracy: {float(acc):.2%}")
 
-    # --- paper §4.1 protocol: latency over 100 random test cases ----------
-    idx = np.random.default_rng(0).choice(len(test.y), 100, replace=False)
+    # --- paper §4.1 protocol: latency over N random test cases, for EVERY
+    # registered execution plan (Fig 4 covers the Pallas plans too) --------
+    n_cases = min(args.latency_cases, len(test.y))
+    if n_cases <= 0:
+        return
+    idx = np.random.default_rng(0).choice(len(test.y), n_cases,
+                                          replace=False)
     cases = jnp.asarray(test.x[idx])
-    plans = {
-        "sequential(fine)": jax.jit(lambda p, x: lstm.forward_sequential(
-            p, x, cfg)),
-        "wavefront(MobiRNN)": jax.jit(lambda p, x: lstm.forward_wavefront(
-            p, x, cfg)),
-    }
-    print("\nlatency for 100 test cases (paper Fig 4 protocol):")
-    for name, fn in plans.items():
+    print(f"\nlatency for {n_cases} test cases (paper Fig 4 protocol):")
+    for name, fwd in lstm.FORWARD_PLANS.items():
+        fn = jax.jit(lambda p, x, fwd=fwd: fwd(p, x, cfg))
         fn(params, cases[:1])  # compile
         t0 = time.perf_counter()
-        for j in range(100):
+        for j in range(n_cases):
             jax.block_until_ready(fn(params, cases[j:j + 1]))
         dt = time.perf_counter() - t0
-        print(f"  {name:20s} {dt * 1e3:8.1f} ms total "
-              f"({dt * 10:.2f} ms/case)")
+        print(f"  {name:12s} {dt * 1e3:8.1f} ms total "
+              f"({dt * 1e3 / n_cases:.2f} ms/case)")
 
 
 if __name__ == "__main__":

@@ -62,6 +62,24 @@ def count_kernel_dispatches(jaxpr) -> int:
     return total
 
 
+def count_train_dispatches(loss_fn, *args) -> int:
+    """Kernel dispatches of ONE training step: the jaxpr of
+    ``jax.value_and_grad(loss_fn)`` with the custom-VJP forward AND backward
+    inlined by partial evaluation, counted by ``count_kernel_dispatches``.
+
+    This is the training-story analogue of the forward dispatch rows: the
+    per-cell plan's VJP unrolls to O(T*L) cell-backward dispatches, while
+    the fused-seq plan's reverse-sweep kernel keeps the whole
+    ``value_and_grad`` at exactly 2 — one trajectory-emitting forward + one
+    BPTT sweep — O(1) in T (asserted by tests/test_plan_equivalence.py and
+    tracked by benchmarks/run.py fig2 rows).
+    """
+    import jax
+
+    return count_kernel_dispatches(
+        jax.make_jaxpr(jax.value_and_grad(loss_fn))(*args))
+
+
 # ---------------------------------------------------------------------------
 # Analytic parameter counts
 # ---------------------------------------------------------------------------

@@ -22,6 +22,13 @@ asserted by tests/test_plan_equivalence.py), and when the scheduler
   MobiRNN fast path.  Falls back to ``forward_fused_kernel`` when the
   stacked weights exceed the VMEM budget (core/factorization).
 
+All four are real TRAINING choices too: under ``jax.grad`` the fused plans
+carry custom VJPs — ``fused_seq`` runs ONE reverse-sweep BPTT kernel
+(kernels/lstm_seq_bwd.py; 2 dispatches per value_and_grad, O(1) in T) with
+an oracle-VJP fallback gated by ``choose_batch_block(mode="bwd")``;
+``fused_cell`` differentiates the per-cell oracle.  Train-time schedulers
+must size the backward working set via ``plan_viability(train=True)``.
+
 The classifier head follows Guan & Ploetz-style HAR models: last hidden state
 -> dense -> 6-way softmax.
 """
@@ -117,11 +124,15 @@ def forward_fused_seq(params: dict, x: jax.Array, cfg: LSTMConfig,
                       vmem_budget: int | None = None) -> jax.Array:
     """Sequence-resident plan: ONE Pallas dispatch for the whole (T x L)
     recurrence (kernels/lstm_seq.py) — dispatch count O(1) in T instead of
-    the per-cell plan's O(T*L).
+    the per-cell plan's O(T*L).  Under ``jax.grad`` the custom VJP runs the
+    trajectory-emitting forward plus ONE reverse-sweep BPTT dispatch
+    (kernels/lstm_seq_bwd.py); when the backward working set (~3x the
+    forward one) does not fit VMEM, the backward alone falls back to the
+    oracle VJP while the forward stays fused.
 
-    When the stacked (L, P+H, 4H) weights (plus state and the input block)
-    exceed the VMEM budget, routes to ``forward_fused_kernel``, whose
-    per-cell kernel tiles the hidden dimension through HBM instead.
+    When even the forward stacked (L, P+H, 4H) weights (plus state and the
+    input block) exceed the VMEM budget, routes to ``forward_fused_kernel``,
+    whose per-cell kernel tiles the hidden dimension through HBM instead.
     """
     from repro.kernels import lstm_seq as seq_lib
     from repro.kernels import ops as kernel_ops
@@ -129,15 +140,21 @@ def forward_fused_seq(params: dict, x: jax.Array, cfg: LSTMConfig,
     p = _plain_params(params)
     w_stack, b_stack, p_width = seq_lib.stack_params(p["layers"], cfg.hidden)
     B, T, _ = x.shape
+    dtype_bytes = jnp.dtype(x.dtype).itemsize
+    w_bytes = jnp.dtype(w_stack.dtype).itemsize
     block_b = seq_lib.choose_batch_block(
         B, T, cfg.n_layers, p_width, cfg.hidden,
-        dtype_bytes=jnp.dtype(x.dtype).itemsize, vmem_budget=vmem_budget,
-        w_dtype_bytes=jnp.dtype(w_stack.dtype).itemsize)
+        dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+        w_dtype_bytes=w_bytes)
     if block_b is None:   # working set (weights + T-resident input) > VMEM
         return forward_fused_kernel(params, x, cfg, interpret=interpret)
+    bwd_block_b = seq_lib.choose_batch_block(
+        B, T, cfg.n_layers, p_width, cfg.hidden,
+        dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+        w_dtype_bytes=w_bytes, mode="bwd") or seq_lib.ORACLE_BWD
     xp = seq_lib.pad_input(x, p_width)
     _, h = kernel_ops.lstm_seq(w_stack, b_stack, xp, block_b=block_b,
-                               interpret=interpret)
+                               bwd_block_b=bwd_block_b, interpret=interpret)
     return h[-1] @ p["head"]["w"] + p["head"]["b"]
 
 
@@ -162,7 +179,8 @@ FORWARD_PLANS: dict[str, Callable] = {
 def plan_viability(cfg: LSTMConfig, batch: int, seq_len: int, *,
                    seq_plan_names: tuple[str, ...] = ("fused_seq",),
                    dtype_bytes: int = 4, w_dtype_bytes: int | None = None,
-                   vmem_budget: int | None = None) -> Callable[[str], bool]:
+                   vmem_budget: int | None = None,
+                   train: bool = False) -> Callable[[str], bool]:
     """Viability predicate for ``Scheduler(viable=...)``.
 
     The sequence-resident plan is only a real plan while
@@ -173,6 +191,14 @@ def plan_viability(cfg: LSTMConfig, batch: int, seq_len: int, *,
     ``fused_cell`` under a misleading name.  ``seq_plan_names`` lists the
     scheduler names registered for the sequence-resident plan (benchmarks
     register it as ``accel_seq``).  All other plan names are always viable.
+
+    ``train=True`` sizes the BACKWARD working set instead
+    (``choose_batch_block(mode="bwd")``: trajectory residuals + gradient
+    accumulators, ~3x the forward) — the number that matters when the
+    scheduled step runs under ``jax.grad``.  Without it the scheduler can
+    pick ``fused_seq`` for a training step whose backward residuals blow
+    the VMEM budget and silently drops to the oracle VJP, i.e. the slow
+    path under the fast plan's name.
     """
     from repro.kernels import lstm_seq as seq_lib
 
@@ -180,7 +206,7 @@ def plan_viability(cfg: LSTMConfig, batch: int, seq_len: int, *,
     block = seq_lib.choose_batch_block(
         batch, seq_len, cfg.n_layers, p_width, cfg.hidden,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
-        w_dtype_bytes=w_dtype_bytes)
+        w_dtype_bytes=w_dtype_bytes, mode="bwd" if train else "fwd")
 
     def viable(plan_name: str) -> bool:
         return block is not None or plan_name not in seq_plan_names

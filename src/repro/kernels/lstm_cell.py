@@ -51,15 +51,12 @@ def _kernel(xh_ref, w_ref, b_ref, c_ref, c_out_ref, h_out_ref):
     jax.jit,
     static_argnames=("block_b", "block_h", "interpret"),
 )
-def lstm_cell(w: jax.Array, b: jax.Array, x: jax.Array, c: jax.Array,
-              h: jax.Array, *, block_b: int = 128, block_h: int = 128,
-              interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """Fused cell step.  w: (D+H, 4H) gate order (i,f,g,o); x: (B, D);
-    c, h: (B, H).  Returns (c', h')."""
+def _lstm_cell_call(w: jax.Array, b: jax.Array, x: jax.Array, c: jax.Array,
+                    h: jax.Array, block_b: int, block_h: int,
+                    interpret: bool) -> tuple[jax.Array, jax.Array]:
     B, D = x.shape
     H = c.shape[-1]
     K = D + H
-    assert w.shape == (K, 4 * H), (w.shape, K, H)
     xh = jnp.concatenate([x, h], axis=-1)
     w3 = w.reshape(K, 4, H)
     b2 = b.reshape(4, H)
@@ -84,3 +81,41 @@ def lstm_cell(w: jax.Array, b: jax.Array, x: jax.Array, c: jax.Array,
         interpret=interpret,
     )(xh, w3, b2, c)
     return c_new, h_new
+
+
+# ---------------------------------------------------------------------------
+# Differentiable entry point: pallas_call has no VJP rule, so the backward
+# differentiates the per-cell jnp oracle (kernels/ref.lstm_cell — identical
+# math), making the per-cell plan a real TRAINING choice.  Per cell that is
+# one oracle-VJP; composed over the scan it is the O(T*L) baseline the
+# sequence-resident reverse sweep (kernels/lstm_seq_bwd.py) coarsens away.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _lstm_cell(w, b, x, c, h, block_b, block_h, interpret):
+    return _lstm_cell_call(w, b, x, c, h, block_b, block_h, interpret)
+
+
+def _lstm_cell_fwd(w, b, x, c, h, block_b, block_h, interpret):
+    out = _lstm_cell_call(w, b, x, c, h, block_b, block_h, interpret)
+    return out, (w, b, x, c, h)
+
+
+def _lstm_cell_bwd(block_b, block_h, interpret, residuals, cotangents):
+    from repro.kernels import ref
+
+    _, vjp = jax.vjp(ref.lstm_cell, *residuals)
+    return vjp(cotangents)
+
+
+_lstm_cell.defvjp(_lstm_cell_fwd, _lstm_cell_bwd)
+
+
+def lstm_cell(w: jax.Array, b: jax.Array, x: jax.Array, c: jax.Array,
+              h: jax.Array, *, block_b: int = 128, block_h: int = 128,
+              interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Fused cell step.  w: (D+H, 4H) gate order (i,f,g,o); x: (B, D);
+    c, h: (B, H).  Returns (c', h')."""
+    B, D = x.shape
+    H = c.shape[-1]
+    assert w.shape == (D + H, 4 * H), (w.shape, D + H, H)
+    return _lstm_cell(w, b, x, c, h, block_b, block_h, interpret)

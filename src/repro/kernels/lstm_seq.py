@@ -29,10 +29,20 @@ hidden because it re-synchronises through HBM every step.  See
 core/lstm.py for the four-plan decision table.
 
 Autodiff: ``pallas_call`` has no VJP rule, so ``lstm_seq`` wraps the kernel
-in a ``jax.custom_vjp`` whose backward pass differentiates the pure-jnp
-oracle (kernels/ref.lstm_seq) — numerically identical forward math, so the
-gradients are exact (tests/test_lstm_seq.py checks against end-to-end
-reference grads).
+in a ``jax.custom_vjp``.  Under differentiation the forward runs a
+trajectory-emitting variant of the kernel (same math, same single dispatch)
+that additionally writes the per-step ``(c, h)`` trajectory — two
+``(T, L, B, H)`` f32 residuals — and the backward runs the whole
+reverse-time BPTT sweep in ONE kernel dispatch (kernels/lstm_seq_bwd.py):
+gates are recomputed from the stored trajectory, ``dw``/``db`` accumulate in
+f32 VMEM scratch across batch tiles, and the ``(dc, dh)`` carries never
+leave VMEM.  When ``choose_batch_block(mode="bwd")`` finds no batch tile
+whose backward working set (~3x the forward one: trajectories + dw scratch
++ dx block ride along) fits the budget, the backward falls back to
+differentiating the pure-jnp oracle (kernels/ref.lstm_seq) — numerically
+identical forward math, so gradients stay exact either way
+(tests/test_lstm_seq.py checks both paths against end-to-end reference
+grads).
 """
 from __future__ import annotations
 
@@ -88,36 +98,64 @@ def pad_input(x: jax.Array, p_width: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
                       block_b: int, dtype_bytes: int = 4,
-                      w_dtype_bytes: int | None = None) -> int:
-    """Kernel working set for one grid step: stacked weights + the batch
+                      w_dtype_bytes: int | None = None,
+                      mode: str = "fwd") -> int:
+    """Kernel working set for one grid step, per phase.
+
+    ``mode="fwd"`` sizes the inference forward: stacked weights + the batch
     tile's whole input sequence + f32 (c,h) scratch + output blocks.
+
+    ``mode="bwd"`` sizes the TRAINING working set — the reverse-sweep kernel
+    (kernels/lstm_seq_bwd.py), which strictly dominates the
+    trajectory-emitting forward that feeds it, so one number gates both
+    dispatches.  On top of the forward set it holds the two (T, L, bm, H)
+    f32 trajectory residuals, the f32 dw/db accumulator scratch (a second
+    weight-stack-sized block), the dw/db output blocks, the dx output block
+    (mirroring the input block) and the (dc, dh) carry scratch — roughly 3x
+    the forward working set at the paper's shapes.
 
     ``dtype_bytes`` sizes activations/outputs; ``w_dtype_bytes`` sizes the
     weight stack (defaults to ``dtype_bytes`` — pass it explicitly under
     mixed precision, e.g. bf16 activations over f32 parameters)."""
+    if mode not in ("fwd", "bwd"):
+        raise ValueError(f"mode must be 'fwd' or 'bwd', got {mode!r}")
     wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
     weights = n_layers * (p_width + hidden) * 4 * hidden * wb
     biases = n_layers * 4 * hidden * wb
     x_block = block_b * seq_len * p_width * dtype_bytes
     state = 2 * n_layers * block_b * hidden * 4          # f32 scratch
     outs = 2 * n_layers * block_b * hidden * dtype_bytes
-    return weights + biases + x_block + state + outs
+    total = weights + biases + x_block + state + outs
+    if mode == "bwd":
+        traj = 2 * seq_len * n_layers * block_b * hidden * 4   # f32 residual
+        dw_scratch = weights // wb * 4 + biases // wb * 4      # f32 accum
+        dw_out = weights + biases                              # param dtype
+        dx_block = x_block                                     # dx mirrors x
+        # (dc, dh) carries reuse `state`; the final-state cotangent blocks:
+        cots = 2 * n_layers * block_b * hidden * dtype_bytes
+        total += traj + dw_scratch + dw_out + dx_block + cots
+    return total
 
 
 def choose_batch_block(batch: int, seq_len: int, n_layers: int,
                        p_width: int, hidden: int, dtype_bytes: int = 4,
                        vmem_budget: int | None = None,
-                       w_dtype_bytes: int | None = None) -> int | None:
+                       w_dtype_bytes: int | None = None,
+                       mode: str = "fwd") -> int | None:
     """Pick the batch tile, or None when the kernel is not viable.
 
     Seeds the tile from factorization.choose_block on the per-step gate
     matmul (B, P+H) x (P+H, 4H) — the coarsest MXU-aligned block — then
     halves it until the sequence-resident working set fits the budget.
-    Returns None when even a bm=1 tile cannot fit — either the weight
-    stack itself blows VMEM (large H/L) or the whole-sequence input block
-    does (very large T: the kernel keeps all T timesteps resident;
+    ``mode="bwd"`` sizes the TRAINING working set instead (trajectory
+    residuals + gradient accumulators, see ``working_set_bytes``) — under
+    ``jax.grad`` this is the number that matters, and it is ~3x the forward
+    one, so a batch tile that is fine for inference can be non-viable for
+    training.  Returns None when even a bm=1 tile cannot fit — either the
+    weight stack itself blows VMEM (large H/L) or the whole-sequence input
+    block does (very large T: the kernel keeps all T timesteps resident;
     time-tiling the input DMA is a ROADMAP open item).  Callers then fall
-    back to the per-cell kernel.
+    back to the per-cell kernel (fwd) or the oracle VJP (bwd).
     """
     budget = factorization.DEFAULT_VMEM_BUDGET if vmem_budget is None \
         else vmem_budget
@@ -127,7 +165,7 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
     bm = min(bm, batch)
     while bm >= 1:
         if working_set_bytes(seq_len, n_layers, p_width, hidden, bm,
-                             dtype_bytes, w_dtype_bytes) <= budget:
+                             dtype_bytes, w_dtype_bytes, mode=mode) <= budget:
             return bm
         if bm == 1:
             break
@@ -138,6 +176,37 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
 # ---------------------------------------------------------------------------
 # Kernel
 # ---------------------------------------------------------------------------
+def _step_layers(inp, w_ref, b_ref, c_scr, h_scr, *, n_layers: int,
+                 p_width: int) -> None:
+    """Advance all L layers one timestep, updating (c, h) scratch in place.
+
+    ``inp``: (bm, P) f32 — this step's (padded) input.  Shared by the plain,
+    trajectory-emitting, and backward-recompute kernel bodies so the three
+    dispatches stay bit-identical in their forward math.
+    """
+    for layer in range(n_layers):                        # static unroll
+        w = w_ref[layer]                                 # (P+H, 4H)
+        # one coarse MXU work unit per layer: all four gates at once,
+        # split as x-part + h-part to skip an in-loop concatenate
+        gates = (
+            jax.lax.dot_general(inp, w[:p_width],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=F32)
+            + jax.lax.dot_general(h_scr[layer], w[p_width:],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=F32)
+            + b_ref[layer].astype(F32))
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c_new = (jax.nn.sigmoid(f) * c_scr[layer]
+                 + jax.nn.sigmoid(i) * jnp.tanh(g))
+        h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+        c_scr[layer] = c_new
+        h_scr[layer] = h_new
+        hidden = h_new.shape[-1]
+        inp = h_new if p_width == hidden else \
+            jnp.pad(h_new, ((0, 0), (0, p_width - hidden)))
+
+
 def _seq_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, c_scr, h_scr,
                 *, n_layers: int, seq_len: int, p_width: int):
     """One batch tile runs the whole (T x L) recurrence from VMEM.
@@ -151,27 +220,32 @@ def _seq_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, c_scr, h_scr,
 
     def step(t, carry):
         inp = x_ref[pl.ds(t, 1)][0].astype(F32)          # (bm, P)
-        for layer in range(n_layers):                    # static unroll
-            w = w_ref[layer]                             # (P+H, 4H)
-            # one coarse MXU work unit per layer: all four gates at once,
-            # split as x-part + h-part to skip an in-loop concatenate
-            gates = (
-                jax.lax.dot_general(inp, w[:p_width],
-                                    (((1,), (0,)), ((), ())),
-                                    preferred_element_type=F32)
-                + jax.lax.dot_general(h_scr[layer], w[p_width:],
-                                      (((1,), (0,)), ((), ())),
-                                      preferred_element_type=F32)
-                + b_ref[layer].astype(F32))
-            i, f, g, o = jnp.split(gates, 4, axis=-1)
-            c_new = (jax.nn.sigmoid(f) * c_scr[layer]
-                     + jax.nn.sigmoid(i) * jnp.tanh(g))
-            h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
-            c_scr[layer] = c_new
-            h_scr[layer] = h_new
-            hidden = h_new.shape[-1]
-            inp = h_new if p_width == hidden else \
-                jnp.pad(h_new, ((0, 0), (0, p_width - hidden)))
+        _step_layers(inp, w_ref, b_ref, c_scr, h_scr, n_layers=n_layers,
+                     p_width=p_width)
+        return carry
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+    c_out_ref[...] = c_scr[...].astype(c_out_ref.dtype)
+    h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
+
+
+def _seq_traj_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, ct_ref,
+                     ht_ref, c_scr, h_scr, *, n_layers: int, seq_len: int,
+                     p_width: int):
+    """Forward with residuals: same recurrence, but every step also writes
+    the post-step (c, h) into the (T, L, bm, H) f32 trajectory outputs —
+    the residual contract the reverse-sweep kernel (lstm_seq_bwd) consumes.
+    Still ONE dispatch; the trajectory rows stream out of the same loop.
+    """
+    c_scr[...] = jnp.zeros_like(c_scr)
+    h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, carry):
+        inp = x_ref[pl.ds(t, 1)][0].astype(F32)          # (bm, P)
+        _step_layers(inp, w_ref, b_ref, c_scr, h_scr, n_layers=n_layers,
+                     p_width=p_width)
+        ct_ref[pl.ds(t, 1)] = c_scr[...][None]
+        ht_ref[pl.ds(t, 1)] = h_scr[...][None]
         return carry
 
     jax.lax.fori_loop(0, seq_len, step, 0)
@@ -212,49 +286,115 @@ def _lstm_seq_call(w: jax.Array, b: jax.Array, x: jax.Array,
     )(xt, w, b)
 
 
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _lstm_seq_traj_call(w: jax.Array, b: jax.Array, x: jax.Array,
+                        block_b: int, interpret: bool
+                        ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array]:
+    """Trajectory-emitting forward: (c, h, c_traj, h_traj), still ONE
+    dispatch.  Trajectories are (T, L, B, H) f32 — the residual contract."""
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    B, T, _ = x.shape
+    bm = min(block_b, B)
+    xt = jnp.swapaxes(x, 0, 1)                           # (T, B, P)
+    out = jax.ShapeDtypeStruct((L, B, H), x.dtype)
+    traj = jax.ShapeDtypeStruct((T, L, B, H), F32)
+    kernel = functools.partial(_seq_traj_kernel, n_layers=L, seq_len=T,
+                               p_width=P)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(B, bm),),
+        in_specs=[
+            pl.BlockSpec((T, bm, P), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((T, L, bm, H), lambda ib: (0, 0, ib, 0)),
+            pl.BlockSpec((T, L, bm, H), lambda ib: (0, 0, ib, 0)),
+        ],
+        out_shape=[out, out, traj, traj],
+        scratch_shapes=[
+            pltpu.VMEM((L, bm, H), F32),
+            pltpu.VMEM((L, bm, H), F32),
+        ],
+        interpret=interpret,
+    )(xt, w, b)
+
+
 # ---------------------------------------------------------------------------
 # Differentiable entry point
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _lstm_seq(w, b, x, block_b, interpret):
+#: bwd_block_b sentinel: "no viable backward tile — use the oracle VJP".
+ORACLE_BWD = 0
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _lstm_seq(w, b, x, block_b, bwd_block_b, interpret):
     return _lstm_seq_call(w, b, x, block_b, interpret)
 
 
-def _lstm_seq_fwd(w, b, x, block_b, interpret):
-    return _lstm_seq_call(w, b, x, block_b, interpret), (w, b, x)
+def _lstm_seq_fwd(w, b, x, block_b, bwd_block_b, interpret):
+    if bwd_block_b == ORACLE_BWD:
+        # backward working set does not fit VMEM: plain forward, oracle VJP
+        return _lstm_seq_call(w, b, x, block_b, interpret), (w, b, x)
+    c, h, ct, ht = _lstm_seq_traj_call(w, b, x, bwd_block_b, interpret)
+    return (c, h), (w, b, x, ct, ht)
 
 
-def _lstm_seq_bwd(block_b, interpret, residuals, cotangents):
-    from repro.kernels import ref
-    w, b, x = residuals
-    _, vjp = jax.vjp(ref.lstm_seq, w, b, x)
-    return vjp(cotangents)
+def _lstm_seq_bwd(block_b, bwd_block_b, interpret, residuals, cotangents):
+    if bwd_block_b == ORACLE_BWD:
+        from repro.kernels import ref
+        w, b, x = residuals
+        _, vjp = jax.vjp(ref.lstm_seq, w, b, x)
+        return vjp(cotangents)
+    from repro.kernels import lstm_seq_bwd as bwd_lib
+    w, b, x, ct, ht = residuals
+    dc, dh = cotangents
+    return bwd_lib.lstm_seq_bwd(w, b, x, ct, ht, dc, dh,
+                                block_b=bwd_block_b, interpret=interpret)
 
 
 _lstm_seq.defvjp(_lstm_seq_fwd, _lstm_seq_bwd)
 
 
 def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
-             block_b: int | None = None, interpret: bool = True
-             ) -> tuple[jax.Array, jax.Array]:
+             block_b: int | None = None, bwd_block_b: int | None = None,
+             interpret: bool = True) -> tuple[jax.Array, jax.Array]:
     """Whole-sequence stacked LSTM in ONE kernel dispatch.
 
     w: (L, P+H, 4H) stacked gate weights (stack_params); b: (L, 4H);
     x: (B, T, P) input zero-padded to width P (pad_input).
     Returns final (c, h), each (L, B, H).  Oracle: kernels/ref.lstm_seq.
+
+    ``bwd_block_b`` is the batch tile for the TRAINING path (the
+    trajectory-emitting forward + the reverse-sweep kernel, each ONE
+    dispatch); defaults to ``choose_batch_block(mode="bwd")``.  Pass
+    ``ORACLE_BWD`` (0) to force the oracle-VJP fallback — which is also what
+    happens automatically when no backward tile fits the VMEM budget.
+    Inference through ``lstm_seq`` never pays for residuals: the trajectory
+    variant only runs under differentiation (custom_vjp fwd rule).
     """
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H
     B, T, xw = x.shape
     assert w.shape[1] == P + H and xw == P, (w.shape, x.shape)
+    dtype_bytes = jnp.dtype(x.dtype).itemsize
+    w_bytes = jnp.dtype(w.dtype).itemsize
     if block_b is None:
         block_b = choose_batch_block(
-            B, T, L, P, H, dtype_bytes=jnp.dtype(x.dtype).itemsize,
-            w_dtype_bytes=jnp.dtype(w.dtype).itemsize)
+            B, T, L, P, H, dtype_bytes=dtype_bytes, w_dtype_bytes=w_bytes)
         if block_b is None:
             raise ValueError(
                 f"sequence-resident working set (L={L}, P+H={P + H}, "
                 f"4H={4 * H}, T={T}) exceeds the VMEM budget even at "
                 "batch tile 1; use the per-cell fallback "
                 "(core/lstm.forward_fused_seq routes this automatically)")
-    return _lstm_seq(w, b, x, block_b, interpret)
+    if bwd_block_b is None:
+        bwd_block_b = choose_batch_block(
+            B, T, L, P, H, dtype_bytes=dtype_bytes, w_dtype_bytes=w_bytes,
+            mode="bwd") or ORACLE_BWD
+    return _lstm_seq(w, b, x, block_b, bwd_block_b, interpret)

@@ -1,0 +1,216 @@
+"""Sequence-resident fused LSTM BACKWARD: the whole BPTT sweep in ONE
+``pallas_call``.
+
+This is the other half of kernels/lstm_seq.py — MobiRNN's coarsening lesson
+applied to training.  The naive custom-VJP fallback replays the entire
+forward through the jnp oracle and lets autodiff unroll T x L cell
+backwards, so training with the "fast" plan used to be dispatch-bound again
+exactly where the forward had stopped being.  Here the reverse-time loop
+runs INSIDE the kernel:
+
+* grid over batch tiles (batch rows stay independent in the backward);
+* ``fori_loop`` over reversed time; per step, layers unwind top-down;
+* gates are RECOMPUTED from the stored (T, L, bm, H) f32 trajectory
+  residuals (the lstm_seq._seq_traj_kernel contract) — same matmuls as the
+  forward, so the recomputed activations are bit-identical and the
+  gradients exact-math;
+* ``dw``/``db`` accumulate in f32 VMEM scratch that persists across grid
+  steps (batch tiles), written to the outputs once on the last tile;
+* the ``(dc, dh)`` time-carries live in VMEM scratch and never round-trip
+  HBM between steps — the preallocation bound, mirrored in reverse.
+
+Cotangent contract: inputs are the final-state cotangents ``(dc, dh)``
+each (L, B, H); outputs are ``(dw, db, dx)`` in the parameter/input dtypes.
+VMEM sizing: lstm_seq.working_set_bytes(mode="bwd"); when
+choose_batch_block(mode="bwd") returns None the custom_vjp in lstm_seq.py
+falls back to the oracle instead of dispatching this kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _seq_bwd_kernel(x_ref, w_ref, b_ref, ct_ref, ht_ref, dcf_ref, dhf_ref,
+                    dw_ref, db_ref, dx_ref,
+                    dw_scr, db_scr, dc_scr, dh_scr,
+                    *, n_layers: int, seq_len: int, p_width: int,
+                    n_tiles: int, batch: int):
+    """One batch tile unwinds the whole (T x L) recurrence from VMEM.
+
+    x_ref: (T, bm, P); w_ref: (L, P+H, 4H); b_ref: (L, 4H);
+    ct_ref/ht_ref: (T, L, bm, H) f32 post-step state trajectories;
+    dcf_ref/dhf_ref: (L, bm, H) final-state cotangents.
+    dw_scr/db_scr are f32 accumulators shared across ALL grid steps (scratch
+    persists between batch tiles); dc_scr/dh_scr carry the per-tile
+    reverse-time gradient state.
+
+    Unlike the forward — where a non-dividing final tile's out-of-range
+    rows just compute garbage that the output re-tiling drops — here those
+    rows would flow into the SHARED dw/db accumulators, so every load is
+    masked to the valid batch rows of this tile.
+    """
+    hidden = dc_scr.shape[-1]
+    bm = dc_scr.shape[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    valid = (pl.program_id(0) * bm + rows) < batch       # (bm, 1)
+
+    def mask2(a):                                        # (bm, X)
+        return jnp.where(valid, a, 0.0)
+
+    def mask3(a):                                        # (L, bm, X)
+        return jnp.where(valid[None], a, 0.0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _zero_accumulators():
+        dw_scr[...] = jnp.zeros_like(dw_scr)
+        db_scr[...] = jnp.zeros_like(db_scr)
+
+    dc_scr[...] = mask3(dcf_ref[...].astype(F32))
+    dh_scr[...] = mask3(dhf_ref[...].astype(F32))
+
+    def step(rev_t, carry):
+        t = seq_len - 1 - rev_t
+        x_t = mask2(x_ref[pl.ds(t, 1)][0].astype(F32))   # (bm, P)
+        c_t = mask3(ct_ref[pl.ds(t, 1)][0])              # (L, bm, H)
+        h_t = mask3(ht_ref[pl.ds(t, 1)][0])
+        # pre-step state: the previous trajectory row, zeros at t == 0
+        # (clamped read + where keeps the access in bounds under tracing)
+        tm1 = jnp.maximum(t - 1, 0)
+        alive = (t > 0).astype(F32)
+        c_prev_all = mask3(ct_ref[pl.ds(tm1, 1)][0]) * alive
+        h_prev_all = mask3(ht_ref[pl.ds(tm1, 1)][0]) * alive
+
+        dinp = jnp.zeros_like(x_t)                       # from layer above
+        for layer in range(n_layers - 1, -1, -1):        # static unroll
+            w = w_ref[layer].astype(F32)                 # (P+H, 4H)
+            c_prev = c_prev_all[layer]
+            h_prev = h_prev_all[layer]
+            if layer == 0:
+                inp = x_t
+            else:
+                below = h_t[layer - 1]
+                inp = below if p_width == hidden else \
+                    jnp.pad(below, ((0, 0), (0, p_width - hidden)))
+            # recompute this cell's gates — same two matmuls as the forward
+            gates = (
+                jax.lax.dot_general(inp, w[:p_width],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=F32)
+                + jax.lax.dot_general(h_prev, w[p_width:],
+                                      (((1,), (0,)), ((), ())),
+                                      preferred_element_type=F32)
+                + b_ref[layer].astype(F32))
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            si, sf, so = (jax.nn.sigmoid(i), jax.nn.sigmoid(f),
+                          jax.nn.sigmoid(o))
+            tg = jnp.tanh(g)
+            tc = jnp.tanh(c_t[layer])
+            # incoming grads: time-carry + the layer above's input grad
+            dh = dh_scr[layer] + dinp[:, :hidden]
+            dc = dc_scr[layer] + dh * so * (1.0 - tc * tc)
+            dgates = jnp.concatenate([
+                dc * tg * si * (1.0 - si),               # d pre-i
+                dc * c_prev * sf * (1.0 - sf),           # d pre-f
+                dc * si * (1.0 - tg * tg),               # d pre-g
+                dh * tc * so * (1.0 - so),               # d pre-o
+            ], axis=-1)                                  # (bm, 4H)
+            # parameter grads: [inp | h_prev]^T @ dgates, f32 accumulation
+            dw_rows = jnp.concatenate([
+                jax.lax.dot_general(inp, dgates, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=F32),
+                jax.lax.dot_general(h_prev, dgates,
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=F32),
+            ], axis=0)                                   # (P+H, 4H)
+            dw_scr[layer] = dw_scr[layer] + dw_rows
+            db_scr[layer] = db_scr[layer] + jnp.sum(dgates, axis=0)
+            # outgoing grads: recurrence carry + the layer below / input
+            dh_scr[layer] = jax.lax.dot_general(
+                dgates, w[p_width:], (((1,), (1,)), ((), ())),
+                preferred_element_type=F32)              # -> h_{t-1}[layer]
+            dc_scr[layer] = dc * sf                      # -> c_{t-1}[layer]
+            dinp = jax.lax.dot_general(
+                dgates, w[:p_width], (((1,), (1,)), ((), ())),
+                preferred_element_type=F32)              # (bm, P)
+        dx_ref[pl.ds(t, 1)] = dinp[None].astype(dx_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+
+    @pl.when(pl.program_id(0) == n_tiles - 1)
+    def _emit_param_grads():
+        dw_ref[...] = dw_scr[...].astype(dw_ref.dtype)
+        db_ref[...] = db_scr[...].astype(db_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _lstm_seq_bwd_call(w, b, x, ct, ht, dc, dh, block_b: int,
+                       interpret: bool):
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    B, T, _ = x.shape
+    bm = min(block_b, B)
+    n_tiles = pl.cdiv(B, bm)
+    xt = jnp.swapaxes(x, 0, 1)                           # (T, B, P)
+    kernel = functools.partial(_seq_bwd_kernel, n_layers=L, seq_len=T,
+                               p_width=P, n_tiles=n_tiles, batch=B)
+    dw, db, dxt = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((T, bm, P), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
+            pl.BlockSpec((T, L, bm, H), lambda ib: (0, 0, ib, 0)),
+            pl.BlockSpec((T, L, bm, H), lambda ib: (0, 0, ib, 0)),
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+        ],
+        out_specs=[
+            # constant index maps: the dw/db blocks are revisited by every
+            # grid step; the actual cross-tile accumulation happens in the
+            # persistent f32 scratch, written out on the last tile
+            pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
+            pl.BlockSpec((T, bm, P), lambda ib: (0, ib, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(b.shape, b.dtype),
+            jax.ShapeDtypeStruct(xt.shape, x.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM(w.shape, F32),                    # dw accumulator
+            pltpu.VMEM(b.shape, F32),                    # db accumulator
+            pltpu.VMEM((L, bm, H), F32),                 # dc time-carry
+            pltpu.VMEM((L, bm, H), F32),                 # dh time-carry
+        ],
+        interpret=interpret,
+    )(xt, w, b, ct, ht, dc, dh)
+    return dw, db, jnp.swapaxes(dxt, 0, 1)               # dx: (B, T, P)
+
+
+def lstm_seq_bwd(w, b, x, ct, ht, dc, dh, *, block_b: int,
+                 interpret: bool = True):
+    """Whole-sequence BPTT in ONE dispatch: (dw, db, dx).
+
+    w: (L, P+H, 4H); b: (L, 4H); x: (B, T, P) padded input;
+    ct/ht: (T, L, B, H) f32 trajectories (lstm_seq trajectory contract);
+    dc/dh: (L, B, H) cotangents of the final state.  ``block_b`` comes from
+    ``lstm_seq.choose_batch_block(mode="bwd")`` — callers must not dispatch
+    this kernel when that returns None.
+    """
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    B, T, xw = x.shape
+    assert xw == P and ct.shape == (T, L, B, H) == ht.shape, \
+        (w.shape, x.shape, ct.shape, ht.shape)
+    assert dc.shape == (L, B, H) == dh.shape, (dc.shape, dh.shape)
+    return _lstm_seq_bwd_call(w, b, x, ct, ht, dc, dh, block_b, interpret)

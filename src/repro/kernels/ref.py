@@ -61,6 +61,41 @@ def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array
     return c.astype(x.dtype), h.astype(x.dtype)
 
 
+def lstm_seq_traj(w: jax.Array, b: jax.Array, x: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Trajectory-emitting oracle — the residual contract of the fused
+    training path (lstm_seq._seq_traj_kernel / lstm_seq_bwd).
+
+    Same math as ``lstm_seq``, but additionally returns the POST-step state
+    trajectories ``(c_traj, h_traj)``, each (T, L, B, H) float32 — the f32
+    values actually carried through the recurrence, NOT cast to x.dtype,
+    because the backward kernel recomputes gates from them and the
+    recompute must be bit-identical to the forward.
+    Returns (c, h, c_traj, h_traj) with (c, h) exactly ``lstm_seq``'s.
+    """
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    B = x.shape[0]
+    f32 = jnp.float32
+    c0 = jnp.zeros((L, B, H), f32)
+    h0 = jnp.zeros((L, B, H), f32)
+
+    def step(carry, x_t):
+        c, h = carry
+        inp = x_t.astype(f32)
+        cs, hs = [], []
+        for l in range(L):
+            c_new, h_new = lstm_cell(w[l], b[l], inp, c[l], h[l])
+            cs.append(c_new)
+            hs.append(h_new)
+            inp = jnp.pad(h_new, ((0, 0), (0, P - H))) if P > H else h_new
+        new = (jnp.stack(cs), jnp.stack(hs))
+        return new, new
+
+    (c, h), (ct, ht) = jax.lax.scan(step, (c0, h0), jnp.swapaxes(x, 0, 1))
+    return c.astype(x.dtype), h.astype(x.dtype), ct, ht
+
+
 # ---------------------------------------------------------------------------
 # RWKV6 chunked wkv scan (kernels/wkv6.py)
 # ---------------------------------------------------------------------------

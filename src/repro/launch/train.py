@@ -69,12 +69,13 @@ def main() -> None:
     it = data.batches(args.batch, args.seq)
 
     history = []
+    log_every = max(args.log_every, 1)   # --log-every 0 means "every step"
     t0 = time.time()
     with mesh, use_rules(rules):
         for step in range(1, args.steps + 1):
             batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
             params, opt_state, metrics = step_fn(params, opt_state, batch)
-            if step % args.log_every == 0 or step == 1:
+            if step % log_every == 0 or step == 1:
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step
                 m["wall_s"] = round(time.time() - t0, 1)
@@ -84,6 +85,9 @@ def main() -> None:
             if args.ckpt_dir and step % args.ckpt_every == 0:
                 ckpt.save(args.ckpt_dir, step, params,
                           {"arch": cfg.name})
+    if not history:                      # --steps 0: nothing ran, no summary
+        print("no training steps run")
+        return
     first, last = history[0]["loss"], history[-1]["loss"]
     print(f"loss {first:.3f} -> {last:.3f} "
           f"({'improved' if last < first else 'NO IMPROVEMENT'})")

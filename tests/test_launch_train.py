@@ -1,0 +1,32 @@
+"""launch/train.py driver edge cases: ``--log-every 0`` must not divide by
+zero and ``--steps 0`` must not index an empty history (both crashed the
+driver before PR 3)."""
+import sys
+
+import pytest
+
+from repro.launch import train as train_mod
+
+
+def _run(capsys, monkeypatch, *argv):
+    monkeypatch.setattr(sys, "argv", ["train.py", *argv])
+    train_mod.main()
+    return capsys.readouterr().out
+
+
+def test_steps_zero_empty_history(capsys, monkeypatch):
+    out = _run(capsys, monkeypatch,
+               "--arch", "qwen2-0.5b", "--reduced", "--steps", "0",
+               "--batch", "1", "--seq", "8")
+    assert "no training steps run" in out
+    assert "loss" not in out.splitlines()[-1]
+
+
+@pytest.mark.slow
+def test_log_every_zero_logs_every_step(capsys, monkeypatch):
+    out = _run(capsys, monkeypatch,
+               "--arch", "qwen2-0.5b", "--reduced", "--steps", "2",
+               "--batch", "1", "--seq", "8", "--log-every", "0")
+    # clamped to 1: both steps logged, summary printed
+    assert out.count('"step"') == 2
+    assert "loss" in out.splitlines()[-1]

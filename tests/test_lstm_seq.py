@@ -105,21 +105,142 @@ def test_dispatch_count_is_constant_in_T():
 
 
 # ---------------------------------------------------------------------------
-# Gradient flow (custom VJP, interpret mode)
+# Gradient flow (custom VJP: fused reverse-sweep kernel + oracle fallback)
 # ---------------------------------------------------------------------------
+def _loss(fn):
+    def inner(w, b, xp):
+        c, h = fn(w, b, xp)
+        return jnp.sum(h[-1] ** 2) + 0.5 * jnp.sum(c ** 2)
+    return inner
+
+
 def test_grad_matches_reference():
     w, b, xp, _ = _make(2, 16, 9, 3, 5)
 
-    def loss(fn):
-        def inner(w, b, xp):
-            c, h = fn(w, b, xp)
-            return jnp.sum(h[-1] ** 2) + 0.5 * jnp.sum(c ** 2)
-        return inner
-
-    gk = jax.grad(loss(lstm_seq.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
-    gr = jax.grad(loss(ref.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
+    gk = jax.grad(_loss(lstm_seq.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
+    gr = jax.grad(_loss(ref.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
     for a, r in zip(gk, gr):
         assert bool(jnp.all(jnp.isfinite(a)))
         np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-5)
     # gradients reach every input: none are identically zero
     assert all(float(jnp.max(jnp.abs(g))) > 0 for g in gk)
+
+
+def test_traj_forward_matches_oracle_contract():
+    """The trajectory-emitting forward is the residual contract: final
+    (c, h) identical to the plain kernel, trajectories equal to the f32
+    values the oracle scan actually carries (NOT cast to x.dtype)."""
+    for shape in [(2, 32, 9, 3, 7), (1, 8, 5, 2, 1), (3, 16, 40, 5, 4)]:
+        w, b, xp, _ = _make(*shape)
+        c, h, ct, ht = lstm_seq._lstm_seq_traj_call(w, b, xp, 2, True)
+        c_r, h_r, ct_r, ht_r = ref.lstm_seq_traj(w, b, xp)
+        assert ct.dtype == ht.dtype == jnp.float32
+        T, L = xp.shape[1], w.shape[0]
+        assert ct.shape == (T, L, xp.shape[0], w.shape[-1] // 4)
+        np.testing.assert_allclose(c, c_r, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(h, h_r, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(ct, ct_r, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(ht, ht_r, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 32, 9, 3, 7),      # paper-ish, odd batch/seq
+    (1, 8, 5, 2, 1),       # T=1 degenerate
+    (1, 16, 16, 4, 6),     # L=1, D == H (no padding)
+    (3, 16, 40, 5, 4),     # input_dim > hidden (P = D path)
+], ids=["odd", "T1", "L1", "DgtH"])
+def test_bwd_kernel_matches_oracle_grads(shape):
+    """The fused reverse-sweep kernel reproduces the oracle VJP exactly on
+    every degenerate shape the forward is tested on."""
+    w, b, xp, _ = _make(*shape)
+    gk = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq(
+        w, b, x, bwd_block_b=2)), argnums=(0, 1, 2))(w, b, xp)
+    gr = jax.grad(_loss(ref.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-5)
+
+
+def test_bwd_batch_tiling_invariance():
+    """Backward batch tiles (grid > 1, non-dividing — the masked dw/db
+    accumulation path) change nothing."""
+    w, b, xp, _ = _make(2, 24, 9, 5, 6)
+    gr = jax.grad(_loss(ref.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
+    for block_b in (1, 2, 3, 5, 8):
+        gk = jax.grad(_loss(lambda w, b, x, bb=block_b: lstm_seq.lstm_seq(
+            w, b, x, bwd_block_b=bb)), argnums=(0, 1, 2))(w, b, xp)
+        for a, r in zip(gk, gr):
+            np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-5)
+
+
+def test_bwd_oracle_fallback_forced_and_automatic():
+    """bwd_block_b=ORACLE_BWD forces the oracle VJP (same grads, and the
+    plain — residual-free — forward kernel); choose_batch_block(mode='bwd')
+    returning None is the automatic trigger."""
+    w, b, xp, _ = _make(2, 16, 9, 3, 5)
+    g_forced = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq(
+        w, b, x, bwd_block_b=lstm_seq.ORACLE_BWD)),
+        argnums=(0, 1, 2))(w, b, xp)
+    g_kernel = jax.grad(_loss(lstm_seq.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
+    for a, r in zip(g_forced, g_kernel):
+        np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-5)
+    # bwd-mode budget is strictly larger than fwd-mode: there is a budget
+    # window where the forward fits but the backward must fall back
+    fwd_ws = lstm_seq.working_set_bytes(5, 2, 16, 16, 3, mode="fwd")
+    bwd_ws = lstm_seq.working_set_bytes(5, 2, 16, 16, 3, mode="bwd")
+    assert bwd_ws > fwd_ws
+    assert lstm_seq.choose_batch_block(3, 5, 2, 16, 16,
+                                       vmem_budget=fwd_ws) == 3
+    assert lstm_seq.choose_batch_block(3, 5, 2, 16, 16, vmem_budget=fwd_ws,
+                                       mode="bwd") is None
+
+
+def test_forward_fused_seq_bwd_window_falls_back_to_oracle():
+    """Plan-level acceptance: with a VMEM budget inside the window where
+    the forward fits but the backward does not, forward_fused_seq keeps the
+    fused forward (1 dispatch) and its VJP drops to the oracle (0 kernel
+    dispatches) — grads unchanged."""
+    from repro.analysis import count_train_dispatches
+
+    cfg = LSTMConfig(seq_len=6)
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 6, cfg.input_dim))
+    labels = jnp.array([0, 1, 2])
+    p_width = max(cfg.input_dim, cfg.hidden)
+    budget = lstm_seq.working_set_bytes(6, cfg.n_layers, p_width,
+                                        cfg.hidden, 3, mode="fwd")
+    assert lstm_seq.choose_batch_block(3, 6, cfg.n_layers, p_width,
+                                       cfg.hidden, vmem_budget=budget,
+                                       mode="bwd") is None
+
+    def loss(p, vmem_budget=None):
+        return lstm.loss_fn(p, x, labels, cfg,
+                            forward=lambda p, x, cfg: lstm.forward_fused_seq(
+                                p, x, cfg, vmem_budget=vmem_budget))
+
+    _, g_window = jax.value_and_grad(lambda p: loss(p, budget))(params)
+    _, g_full = jax.value_and_grad(loss)(params)
+    for a, r in zip(jax.tree.leaves(g_window), jax.tree.leaves(g_full)):
+        np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-5)
+    assert count_train_dispatches(lambda p: loss(p, budget), params) == 1
+    assert count_train_dispatches(loss, params) == 2
+
+
+def test_train_dispatch_count_O1():
+    """value_and_grad of the fused-seq loss is exactly 2 dispatches (one
+    trajectory-emitting forward + one reverse sweep), independent of T; the
+    oracle fallback still has the single fused forward but an O(T*L)
+    backward replay."""
+    from repro.analysis import count_train_dispatches
+
+    counts = []
+    for t in (4, 16):
+        w, b, xp, _ = _make(2, 8, 5, 2, t)
+        counts.append(count_train_dispatches(
+            lambda w: _loss(lstm_seq.lstm_seq)(w, b, xp), w))
+    assert counts == [2, 2]
+
+    w, b, xp, _ = _make(2, 8, 5, 2, 4)
+    n_fallback = count_train_dispatches(
+        lambda w: _loss(lambda *a: lstm_seq.lstm_seq(
+            *a, bwd_block_b=lstm_seq.ORACLE_BWD))(w, b, xp), w)
+    assert n_fallback == 1      # oracle bwd is jnp-only: just the fwd kernel

@@ -64,3 +64,83 @@ def test_plans_agree_under_jit_and_grad():
     for a, b in zip(jax.tree.leaves(grads[0][1]),
                     jax.tree.leaves(grads[1][1])):
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# GRADIENT equivalence: every plan is the same function under jax.grad too
+# (fused_seq via the fused reverse-sweep kernel, fused_cell via the per-cell
+# oracle VJP, wavefront via plain autodiff) — the training-story guarantee.
+# ---------------------------------------------------------------------------
+TOL_GRAD = {"float32": dict(rtol=2e-4, atol=2e-5),
+            "bfloat16": dict(rtol=8e-2, atol=8e-2)}
+
+
+def _grads(plan, cfg, params, x, labels):
+    fwd = lstm.FORWARD_PLANS[plan]
+    _, g = jax.value_and_grad(
+        lambda p: lstm.loss_fn(p, x, labels, cfg, forward=fwd))(params)
+    return g
+
+
+def _assert_grads_match(plan, shape, dtype):
+    cfg, params, x = _setup(shape, dtype)
+    labels = jnp.arange(shape[0]) % cfg.n_classes
+    want = _grads("sequential", cfg, params, x, labels)
+    got = _grads(plan, cfg, params, x, labels)
+    for a, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.dtype == w.dtype and a.shape == w.shape
+        assert bool(jnp.all(jnp.isfinite(a.astype(jnp.float32))))
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(w, np.float32),
+                                   **TOL_GRAD[dtype])
+
+
+@pytest.mark.parametrize("plan", [n for n in lstm.FORWARD_PLANS
+                                  if n != "sequential"])
+def test_grad_matches_sequential_fast(plan):
+    """Quick-loop guard: the canonical odd shape, float32."""
+    _assert_grads_match(plan, SHAPES[0], "float32")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("shape", SHAPES[1:], ids=lambda s: "b{}t{}h{}d{}l{}"
+                         .format(*s))
+@pytest.mark.parametrize("plan", [n for n in lstm.FORWARD_PLANS
+                                  if n != "sequential"])
+def test_grad_matches_sequential_sweep(plan, shape, dtype):
+    _assert_grads_match(plan, shape, dtype)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("plan", [n for n in lstm.FORWARD_PLANS
+                                  if n != "sequential"])
+def test_grad_matches_sequential_bf16_canonical(plan):
+    _assert_grads_match(plan, SHAPES[0], "bfloat16")
+
+
+def test_value_and_grad_dispatches_O1_in_T():
+    """The fused-seq training step is O(1) Pallas dispatches in T: exactly
+    one trajectory-emitting forward + one reverse-sweep backward, at every
+    sequence length — vs the per-cell plan's O(T*L) forward replay."""
+    from repro.analysis import count_train_dispatches
+
+    counts = []
+    for t in (3, 12, 48):
+        cfg, params, x = _setup((2, t, 16, 9, 2), "float32")
+        labels = jnp.array([0, 1])
+        counts.append(count_train_dispatches(
+            lambda p: lstm.loss_fn(p, x, labels, cfg,
+                                   forward=lstm.FORWARD_PLANS["fused_seq"]),
+            params))
+    assert counts == [2, 2, 2], counts
+
+    # contrast: the per-cell plan's training step scales with T*L (pallas
+    # dispatches all sit in the forward; its VJP replays the jnp oracle)
+    cfg, params, x = _setup((2, 6, 16, 9, 2), "float32")
+    labels = jnp.array([0, 1])
+    n_cell = count_train_dispatches(
+        lambda p: lstm.loss_fn(p, x, labels, cfg,
+                               forward=lstm.FORWARD_PLANS["fused_cell"]),
+        params)
+    assert n_cell == 6 * 2, n_cell

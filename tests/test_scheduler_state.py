@@ -97,6 +97,30 @@ def test_plan_viability_from_vmem_model():
     assert s.choose(load=0.0).plan == "fused_cell"
 
 
+def test_plan_viability_train_mode_is_stricter():
+    """Under jax.grad the fused-seq working set grows ~3x (trajectory
+    residuals + gradient accumulators), so there is a budget window where
+    the plan is viable for inference but NOT for training — a train-time
+    scheduler must pass train=True or it will pick a plan whose backward
+    silently drops to the oracle replay."""
+    from repro.configs import MOBIRNN_LSTM
+    from repro.core import lstm
+    from repro.kernels import lstm_seq as seq_lib
+
+    cfg = MOBIRNN_LSTM
+    p_width = max(cfg.input_dim, cfg.hidden)
+    fwd_ws = seq_lib.working_set_bytes(cfg.seq_len, cfg.n_layers, p_width,
+                                       cfg.hidden, 8, mode="fwd")
+    infer = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=fwd_ws)
+    train = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=fwd_ws,
+                                train=True)
+    assert infer("fused_seq")
+    assert not train("fused_seq")
+    assert train("fused_cell") and train("sequential")  # fallbacks stay
+    # with a real budget both modes admit the plan
+    assert lstm.plan_viability(cfg, 8, cfg.seq_len, train=True)("fused_seq")
+
+
 # ---------------------------------------------------------------------------
 def _spec():
     return {"c": jax.ShapeDtypeStruct((2, 4), jnp.float32),
