@@ -1,5 +1,7 @@
 """Roofline table generator: reads results/dryrun/*.json and emits the
-per-(arch x shape x mesh) three-term table for EXPERIMENTS.md §Roofline."""
+per-(arch x shape x mesh) three-term table for EXPERIMENTS.md §Roofline,
+plus the streamed fused-LSTM roofline (no dryrun records needed): per-chunk
+HBM traffic vs compute for the time-chunked, double-buffered kernels."""
 from __future__ import annotations
 
 import glob
@@ -81,10 +83,65 @@ def table(recs: list[dict], mesh: str = "pod1") -> str:
     return "\n".join(lines)
 
 
+def fused_lstm_stream_table(batch: int = 8, hidden: int = 128,
+                            n_layers: int = 2, input_dim: int = 9) -> str:
+    """Roofline of the time-chunked fused-LSTM kernels across T.
+
+    For each sequence length: the whole-T-resident VMEM footprint, the
+    chosen ``(block_b, time_chunk)`` under the default budget, the streamed
+    HBM bytes per dispatch (input + trajectory + dx traffic — what the
+    double buffer must hide behind compute) and the two roofline terms.
+    The ``bound`` column says which side the pipeline saturates: when
+    ``t_mem`` dominates, a deeper chunk cannot help — the kernel is
+    genuinely bandwidth-bound; when ``t_comp`` dominates, the streaming is
+    free (fully hidden behind the MXU work).
+    """
+    from repro import analysis
+    from repro.kernels import lstm_seq as seq_lib
+
+    p_width = max(input_dim, hidden)
+    rows = [("mode", "T", "blocks(bm,tc)", "resident", "streamed",
+             "t_comp", "t_mem", "bound")]
+    for mode in ("fwd", "bwd"):
+        for T in (128, 512, 2048, 8192):
+            blocks = seq_lib.choose_batch_block(
+                batch, T, n_layers, p_width, hidden, mode=mode)
+            if blocks is None:
+                rows.append((mode, T, "none (per-cell/oracle)", "-", "-",
+                             "-", "-", "-"))
+                continue
+            costs = analysis.lstm_seq_stream_costs(
+                T, n_layers, p_width, hidden, batch, blocks.block_b,
+                blocks.time_chunk, mode=mode)
+            bound = ("memory" if costs["t_memory"] > costs["t_compute"]
+                     else "compute")
+            rows.append((
+                mode, T, f"({blocks.block_b},{blocks.time_chunk})",
+                f"{costs['vmem_resident_bytes'] / 2**20:.2f}MB",
+                f"{costs['hbm_bytes'] / 2**20:.2f}MB",
+                fmt_seconds(costs["t_compute"]),
+                fmt_seconds(costs["t_memory"]), bound))
+    widths = [max(len(str(row[i])) for row in rows)
+              for i in range(len(rows[0]))]
+    lines = []
+    for i, row in enumerate(rows):
+        lines.append(" | ".join(str(c).ljust(w) for c, w in zip(row, widths)))
+        if i == 0:
+            lines.append("-|-".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
 def main() -> None:
+    try:
+        stream_table = fused_lstm_stream_table()
+    except ImportError:
+        stream_table = ("repro not importable — run with PYTHONPATH=src "
+                        "for the streamed fused-LSTM roofline")
+    print("=== streamed fused-LSTM roofline (time-chunked kernels) ===")
+    print(stream_table)
     recs = load()
     if not recs:
-        print("no dry-run records; run python -m repro.launch.dryrun first")
+        print("\nno dry-run records; run python -m repro.launch.dryrun first")
         return
     for mesh in ("pod1", "pod2"):
         n = sum(r["mesh"] == mesh for r in recs)

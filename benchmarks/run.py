@@ -77,6 +77,14 @@ def bench_fig3_factorization() -> None:
         f"gpu_fine/cpu={t_gpu_fine / t_cpu:.2f}x (paper: ~4x slower)")
 
 
+#: Mobile-class VMEM budget for the streamed fig2 family: whole-T residency
+#: falls off it by T=512 (bwd) / T=2048 (fwd) at the seed config, so the
+#: rows demonstrate the time-chunked pipeline keeping the plan fused where
+#: it previously fell back.  Shared with the acceptance tests via
+#: core/factorization so everything asserts one viability surface.
+STREAM_BUDGET = fz.MOBILE_VMEM_BUDGET
+
+
 def bench_fig2_dispatch_counts() -> None:
     """Fig 2/3's real lever, measured at the jaxpr level: kernel dispatches
     per forward AND per training step.  The per-cell fused plan launches one
@@ -84,11 +92,17 @@ def bench_fig2_dispatch_counts() -> None:
     again); the sequence-resident plan (kernels/lstm_seq.py +
     lstm_seq_bwd.py) launches exactly ONE forward and, under
     ``value_and_grad``, one forward + one reverse-sweep — O(1) in T both
-    ways."""
+    ways.  The ``stream_*`` rows repeat the count under the mobile-class
+    STREAM_BUDGET: whole-T residency no longer fits there at long T, but
+    the time-chunked double-buffered kernels keep the counts flat out to
+    T=2048 — the ``nochunk`` note shows where the pre-streaming decision
+    table (allow_chunk=False) would have fallen off the cliff."""
     from repro.analysis import count_kernel_dispatches, count_train_dispatches
+    from repro.kernels import lstm_seq as seq_lib
 
-    for T in (32, 128, 512):
-        cfg = MOBIRNN_LSTM
+    cfg = MOBIRNN_LSTM
+    p_width = max(cfg.input_dim, cfg.hidden)
+    for T in (32, 128, 512, 2048):
         params = lstm.init_params(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (2, T, cfg.input_dim))
         labels = jnp.zeros((2,), jnp.int32)
@@ -113,8 +127,37 @@ def bench_fig2_dispatch_counts() -> None:
         row(f"fig2/train_dispatch_fused_seq_T{T}", float(t_seq),
             f"pallas_calls={t_seq} (1 fwd + 1 bwd, O(1) in T)")
 
+        # the same counts under the mobile-class budget: streamed kernels
+        n_stream = count_kernel_dispatches(jax.make_jaxpr(
+            lambda p, x: lstm.forward_fused_seq(
+                p, x, cfg, vmem_budget=STREAM_BUDGET))(params, x))
+        t_stream = count_train_dispatches(
+            lambda p: lstm.loss_fn(
+                p, x, labels, cfg,
+                forward=lambda p, x, cfg: lstm.forward_fused_seq(
+                    p, x, cfg, vmem_budget=STREAM_BUDGET)),
+            params)
+        blocks = seq_lib.choose_batch_block(
+            2, T, cfg.n_layers, p_width, cfg.hidden,
+            vmem_budget=STREAM_BUDGET)
+        nochunk = seq_lib.choose_batch_block(
+            2, T, cfg.n_layers, p_width, cfg.hidden,
+            vmem_budget=STREAM_BUDGET, allow_chunk=False)
+        row(f"fig2/stream_dispatch_fused_seq_T{T}", float(n_stream),
+            f"pallas_calls={n_stream},blocks={tuple(blocks) if blocks else None},"
+            f"nochunk={'fused_seq' if nochunk else 'fused_cell-fallback'}")
+        bwd_blocks = seq_lib.choose_batch_block(
+            2, T, cfg.n_layers, p_width, cfg.hidden,
+            vmem_budget=STREAM_BUDGET, mode="bwd")
+        bwd_nochunk = seq_lib.choose_batch_block(
+            2, T, cfg.n_layers, p_width, cfg.hidden,
+            vmem_budget=STREAM_BUDGET, mode="bwd", allow_chunk=False)
+        row(f"fig2/stream_train_dispatch_fused_seq_T{T}", float(t_stream),
+            f"pallas_calls={t_stream},"
+            f"bwd_blocks={tuple(bwd_blocks) if bwd_blocks else None},"
+            f"nochunk={'fused-bwd' if bwd_nochunk else 'oracle-fallback'}")
+
     # wall time of the two kernel plans at the paper's default shape
-    cfg = MOBIRNN_LSTM
     params = lstm.init_params(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.input_dim))
     t_cell = timeit(jax.jit(lambda p, x: lstm.forward_fused_kernel(
@@ -124,6 +167,91 @@ def bench_fig2_dispatch_counts() -> None:
     row("fig2/time_fused_cell_T32", t_cell, "interpret-mode wall time")
     row("fig2/time_fused_seq_T32", t_seq,
         f"speedup_vs_percell={t_cell / t_seq:.2f}x")
+
+
+def bench_chunk_sweep() -> None:
+    """fig2/chunk_sweep: latency + dispatch count vs ``time_chunk`` at fixed
+    T.  Dispatch count is flat at 1 by construction (the chunk loop lives
+    INSIDE the kernel); wall time shows the streaming overhead curve — on
+    real TPU the double buffer hides the DMA behind compute, in interpret
+    mode the rows still pin down the shape of the overhead and that
+    chunking never changes results (the kernels are bit-identical, asserted
+    in tests)."""
+    from repro.analysis import count_kernel_dispatches
+    from repro.kernels import lstm_seq as seq_lib
+    from repro.partitioning import split
+
+    cfg = MOBIRNN_LSTM
+    B, T = 4, 256
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.input_dim))
+    values, _ = split(params)
+    w_stack, b_stack, p_width = seq_lib.stack_params(values["layers"],
+                                                     cfg.hidden)
+    xp = seq_lib.pad_input(x, p_width)
+    base = None
+    for tc in (None, 128, 32, 8):
+        fn = jax.jit(lambda w, b, xp, tc=tc: seq_lib.lstm_seq(
+            w, b, xp, block_b=B, time_chunk=tc))
+        t = timeit(fn, w_stack, b_stack, xp, repeats=2)
+        n = count_kernel_dispatches(jax.make_jaxpr(
+            lambda w, b, xp, tc=tc: seq_lib.lstm_seq(
+                w, b, xp, block_b=B, time_chunk=tc))(w_stack, b_stack, xp))
+        base = base or t
+        label = "resident" if tc is None else f"tc{tc}"
+        row(f"fig2/chunk_sweep_{label}", t,
+            f"pallas_calls={n},vs_resident={base / t:.2f}x,T={T}")
+
+
+def bench_stream_smoke() -> None:
+    """CI smoke (fast job): at a T whose whole-T-resident working set
+    exceeds the (constrained) budget, the fused plan must NOT fall back —
+    forward stays 1 dispatch, value_and_grad stays 2, and the executed
+    streamed kernels agree with the sequential oracle."""
+    import numpy as np
+
+    from repro.analysis import count_kernel_dispatches, count_train_dispatches
+    from repro.kernels import lstm_seq as seq_lib
+
+    cfg = MOBIRNN_LSTM
+    B, T = 2, 512
+    p_width = max(cfg.input_dim, cfg.hidden)
+    # the pre-streaming table would fall back at this (T, budget)...
+    assert seq_lib.choose_batch_block(
+        B, T, cfg.n_layers, p_width, cfg.hidden,
+        vmem_budget=STREAM_BUDGET, mode="bwd", allow_chunk=False) is None
+    # ...the chunked table must not
+    bwd_blocks = seq_lib.choose_batch_block(
+        B, T, cfg.n_layers, p_width, cfg.hidden,
+        vmem_budget=STREAM_BUDGET, mode="bwd")
+    assert bwd_blocks is not None and bwd_blocks.time_chunk is not None, \
+        bwd_blocks
+
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.input_dim))
+    labels = jnp.zeros((B,), jnp.int32)
+
+    def fwd(p, x, cfg):
+        return lstm.forward_fused_seq(p, x, cfg, vmem_budget=STREAM_BUDGET)
+
+    n_fwd = count_kernel_dispatches(jax.make_jaxpr(
+        lambda p, x: fwd(p, x, cfg))(params, x))
+    n_train = count_train_dispatches(
+        lambda p: lstm.loss_fn(p, x, labels, cfg, forward=fwd), params)
+    assert n_fwd == 1, f"streamed forward fell back: {n_fwd} dispatches"
+    assert n_train == 2, f"streamed backward fell back: {n_train} dispatches"
+
+    want = lstm.forward_sequential(params, x, cfg)
+    got = fwd(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    _, grads = jax.value_and_grad(
+        lambda p: lstm.loss_fn(p, x, labels, cfg, forward=fwd))(params)
+    assert all(bool(jnp.all(jnp.isfinite(g)))
+               for g in jax.tree.leaves(grads))
+    row("stream_smoke/long_T_fused", float(T),
+        f"fwd_dispatches={n_fwd},train_dispatches={n_train},"
+        f"bwd_blocks={tuple(bwd_blocks)},budget={STREAM_BUDGET}")
 
 
 def bench_fig4_speedup() -> None:
@@ -391,8 +519,13 @@ def main() -> None:
                          "(wave vs slot engine; the CI smoke invocation)")
     ap.add_argument("--train", action="store_true",
                     help="run only the per-plan train-step benchmark")
+    ap.add_argument("--stream-smoke", action="store_true",
+                    help="run only the long-T streaming smoke (asserts the "
+                         "fused plan does NOT fall back past the "
+                         "whole-T-resident budget; the CI fast-job "
+                         "invocation)")
     ap.add_argument("--json", metavar="PATH", default=None,
-                    help="also write the rows as JSON (e.g. BENCH_PR3.json) "
+                    help="also write the rows as JSON (e.g. BENCH_PR4.json) "
                          "for cross-PR perf tracking")
     args = ap.parse_args()
 
@@ -401,8 +534,12 @@ def main() -> None:
         bench_serving()
     elif args.train:
         bench_train_step()
+    elif args.stream_smoke:
+        bench_stream_smoke()
     else:
         bench_fig2_dispatch_counts()
+        bench_chunk_sweep()
+        bench_stream_smoke()
         bench_fig3_factorization()
         bench_fig4_speedup()
         bench_fig5_complexity()

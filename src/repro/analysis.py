@@ -80,6 +80,75 @@ def count_train_dispatches(loss_fn, *args) -> int:
         jax.make_jaxpr(jax.value_and_grad(loss_fn))(*args))
 
 
+def lstm_seq_stream_costs(seq_len: int, n_layers: int, p_width: int,
+                          hidden: int, batch: int, block_b: int,
+                          time_chunk: int | None, dtype_bytes: int = 4,
+                          w_dtype_bytes: int | None = None,
+                          mode: str = "fwd") -> dict[str, float]:
+    """Roofline terms for ONE fused-LSTM dispatch under the streamed layout.
+
+    The time-chunked kernels (kernels/lstm_seq.py / lstm_seq_bwd.py) trade
+    VMEM residency for HBM streaming: per batch tile, the input crosses
+    HBM->VMEM once in ceil(T/tc) chunks (clamped tail windows re-read up to
+    tc-1 rows), the training path streams the two f32 trajectories out
+    (fwd) and back in with a one-row overlap per chunk (bwd), and dx
+    streams out.  Weights cross once per batch tile; the recurrent state
+    never crosses at all — that is the point of the kernel.
+
+    Returns ``flops`` (MXU work: 2 gate matmuls per cell fwd, 6 in the
+    reverse sweep — gate recompute + dw + input/carry grads),
+    ``hbm_bytes`` (total streamed traffic of the dispatch),
+    ``vmem_resident_bytes`` (kernels/lstm_seq.working_set_bytes for the
+    same tiling — O(tc) when chunked, O(T) when not), and ``t_compute`` /
+    ``t_memory`` seconds at this chip's peak (PEAK_FLOPS / HBM_BW) — the
+    two-term roofline of the pipelined kernel: the double buffer hides
+    min(t_compute, t_memory) of the pair.
+
+    ``mode="fwd"`` sizes the inference forward; ``mode="bwd"`` sizes the
+    reverse-sweep dispatch (its trajectory-emitting forward is strictly
+    cheaper on both axes).
+    """
+    from repro.kernels import lstm_seq as seq_lib
+
+    wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
+    n_tiles = math.ceil(batch / block_b)
+    tc = seq_len if time_chunk is None else min(time_chunk, seq_len)
+    nc = math.ceil(seq_len / tc)
+    weight_bytes = (n_layers * (p_width + hidden) * 4 * hidden
+                    + n_layers * 4 * hidden) * wb
+    # streamed rows per batch tile: clamped tail windows re-read rows
+    x_rows = nc * tc
+    traj_rows = nc * (tc + 1 if nc > 1 else tc)
+    x_bytes = x_rows * block_b * p_width * dtype_bytes
+    traj_bytes = 2 * traj_rows * n_layers * block_b * hidden * 4
+    state_out = 2 * n_layers * block_b * hidden * dtype_bytes
+
+    matmul = 2 * block_b * (p_width + hidden) * 4 * hidden  # FLOPs/cell
+    if mode == "fwd":
+        per_tile_bytes = weight_bytes + x_bytes + state_out
+        per_tile_flops = seq_len * n_layers * matmul
+    else:
+        # reverse sweep: x + both trajectories in, dx out, dw/db out once
+        per_tile_bytes = (weight_bytes + x_bytes + traj_bytes
+                          + x_bytes                      # dx mirrors x
+                          + 2 * state_out)               # (dc, dh) cots in
+        per_tile_flops = seq_len * n_layers * 3 * matmul
+    hbm_bytes = n_tiles * per_tile_bytes
+    if mode == "bwd":
+        hbm_bytes += weight_bytes                        # dw/db written once
+    flops = n_tiles * per_tile_flops
+    resident = seq_lib.working_set_bytes(
+        seq_len, n_layers, p_width, hidden, block_b, dtype_bytes,
+        w_dtype_bytes, mode=mode, time_chunk=time_chunk)
+    return {
+        "flops": float(flops),
+        "hbm_bytes": float(hbm_bytes),
+        "vmem_resident_bytes": float(resident),
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": hbm_bytes / HBM_BW,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Analytic parameter counts
 # ---------------------------------------------------------------------------

@@ -88,6 +88,14 @@ def best_cols_per_unit(dev: DeviceProfile, in_dim: int, out_dim: int,
 # ---------------------------------------------------------------------------
 MXU_ALIGN = 128
 DEFAULT_VMEM_BUDGET = 96 << 20   # leave headroom below the 128MB v5e VMEM
+#: Mobile-class fast-memory budget — the constrained tier MobiRNN targets.
+#: Small enough that the seed config's whole-T-resident fused-LSTM working
+#: set falls off it by T=512 (bwd) / T=2048 (fwd), so it is the shared
+#: stress budget for the time-streaming pipeline: benchmarks/run.py
+#: (STREAM_BUDGET rows + --stream-smoke, the CI invocation) and the
+#: acceptance tests (test_plan_equivalence, test_scheduler_state) all
+#: reference THIS constant so they assert one viability surface.
+MOBILE_VMEM_BUDGET = 320 << 10
 
 
 def round_up(x: int, m: int) -> int:
@@ -102,6 +110,13 @@ def choose_block(m: int, n: int, k: int, bytes_per_elem: int = 2,
 
     Mirrors MobiRNN Fig 2c: prefer FEW LARGE grid steps over many small ones;
     shrink the grid only when the working set no longer fits fast memory.
+
+    The sequence-resident LSTM kernels extend this rule along a second
+    axis: kernels/lstm_seq.choose_batch_block seeds its batch tile from
+    this function's ``bm`` and then searches the joint ``(block_b,
+    time_chunk)`` surface — whole-T VMEM residency first, double-buffered
+    time streaming second, smaller batch tiles last — so coarseness is
+    preserved in the same priority order.
     """
     bm = min(round_up(m, align), 512)
     bn = min(round_up(n, align), 512)

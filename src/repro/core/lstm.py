@@ -130,9 +130,13 @@ def forward_fused_seq(params: dict, x: jax.Array, cfg: LSTMConfig,
     forward one) does not fit VMEM, the backward alone falls back to the
     oracle VJP while the forward stays fused.
 
-    When even the forward stacked (L, P+H, 4H) weights (plus state and the
-    input block) exceed the VMEM budget, routes to ``forward_fused_kernel``,
-    whose per-cell kernel tiles the hidden dimension through HBM instead.
+    The tiling comes from ``choose_batch_block`` as a ``(block_b,
+    time_chunk)`` pair: whole-T VMEM residency when it fits, otherwise the
+    kernels STREAM the time axis through double-buffered chunks — long T is
+    no longer a reason to leave the fused plan.  Only when even a
+    ``(bm=1, tc=1)`` tiling cannot fit (the weight stack itself blows the
+    budget) does this route to ``forward_fused_kernel``, whose per-cell
+    kernel tiles the hidden dimension through HBM instead.
     """
     from repro.kernels import lstm_seq as seq_lib
     from repro.kernels import ops as kernel_ops
@@ -142,19 +146,26 @@ def forward_fused_seq(params: dict, x: jax.Array, cfg: LSTMConfig,
     B, T, _ = x.shape
     dtype_bytes = jnp.dtype(x.dtype).itemsize
     w_bytes = jnp.dtype(w_stack.dtype).itemsize
-    block_b = seq_lib.choose_batch_block(
+    blocks = seq_lib.choose_batch_block(
         B, T, cfg.n_layers, p_width, cfg.hidden,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
         w_dtype_bytes=w_bytes)
-    if block_b is None:   # working set (weights + T-resident input) > VMEM
+    if blocks is None:    # weight stack > VMEM even at (bm=1, tc=1)
         return forward_fused_kernel(params, x, cfg, interpret=interpret)
-    bwd_block_b = seq_lib.choose_batch_block(
+    bwd_blocks = seq_lib.choose_batch_block(
         B, T, cfg.n_layers, p_width, cfg.hidden,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
-        w_dtype_bytes=w_bytes, mode="bwd") or seq_lib.ORACLE_BWD
+        w_dtype_bytes=w_bytes, mode="bwd")
     xp = seq_lib.pad_input(x, p_width)
-    _, h = kernel_ops.lstm_seq(w_stack, b_stack, xp, block_b=block_b,
-                               bwd_block_b=bwd_block_b, interpret=interpret)
+    if bwd_blocks is None:
+        bwd_kw = dict(bwd_block_b=seq_lib.ORACLE_BWD)
+    else:
+        bwd_kw = dict(bwd_block_b=bwd_blocks.block_b,
+                      bwd_time_chunk=bwd_blocks.time_chunk)
+    _, h = kernel_ops.lstm_seq(w_stack, b_stack, xp,
+                               block_b=blocks.block_b,
+                               time_chunk=blocks.time_chunk,
+                               interpret=interpret, **bwd_kw)
     return h[-1] @ p["head"]["w"] + p["head"]["b"]
 
 
@@ -184,11 +195,14 @@ def plan_viability(cfg: LSTMConfig, batch: int, seq_len: int, *,
     """Viability predicate for ``Scheduler(viable=...)``.
 
     The sequence-resident plan is only a real plan while
-    ``kernels/lstm_seq.choose_batch_block`` finds a batch tile whose whole
-    working set (stacked weights + T-resident input + state) fits VMEM;
-    past the budget ``forward_fused_seq`` silently reroutes to the per-cell
-    kernel, so calibrating or choosing it would just duplicate
-    ``fused_cell`` under a misleading name.  ``seq_plan_names`` lists the
+    ``kernels/lstm_seq.choose_batch_block`` finds a ``(block_b,
+    time_chunk)`` tiling whose working set fits VMEM — whole-T residency or
+    double-buffered time streaming; past the budget ``forward_fused_seq``
+    silently reroutes to the per-cell kernel, so calibrating or choosing it
+    would just duplicate ``fused_cell`` under a misleading name.  With time
+    streaming, long T alone never disqualifies the plan — only a weight
+    stack (plus its gradient accumulators, under ``train=True``) that blows
+    the budget at ``(bm=1, tc=1)`` does.  ``seq_plan_names`` lists the
     scheduler names registered for the sequence-resident plan (benchmarks
     register it as ``accel_seq``).  All other plan names are always viable.
 

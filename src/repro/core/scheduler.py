@@ -17,8 +17,14 @@ that module's docstring for the full decision table):
 * ``fused_cell`` — per-cell Pallas kernel, T x L dispatches.  Wins in
   compute-bound regimes (H too large for VMEM-resident weights).
 * ``fused_seq`` — sequence-resident Pallas kernel, ONE dispatch.  Wins in
-  dispatch-bound regimes (the MobiRNN case: small models, long sequences);
-  auto-falls-back to ``fused_cell`` past the VMEM budget.
+  dispatch-bound regimes (the MobiRNN case: small models, long sequences).
+  Its viability surface is the joint ``(block_b, time_chunk)`` table of
+  kernels/lstm_seq.choose_batch_block: whole-T VMEM residency when it
+  fits, double-buffered time streaming past that — so long T alone never
+  disqualifies it; only a weight stack that blows the budget at
+  ``(bm=1, tc=1)`` routes to ``fused_cell`` (wire the table in via
+  ``Scheduler(viable=core/lstm.plan_viability(...))``, with
+  ``train=True`` for training-step schedulers).
 """
 from __future__ import annotations
 

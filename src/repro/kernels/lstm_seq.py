@@ -28,6 +28,21 @@ returns None and callers fall back to the per-cell kernel, which DOES tile
 hidden because it re-synchronises through HBM every step.  See
 core/lstm.py for the four-plan decision table.
 
+Time streaming: the recurrence is sequential in T, but the INPUT is not —
+so past a modest T the kernel does not need the whole ``(T, bm, P)`` block
+resident.  With ``time_chunk=tc`` the input stays in HBM
+(``pltpu.ANY``) and the kernel streams it through two ``(tc, bm, P)`` VMEM
+buffers with async copies, prefetching chunk k+1 while chunk k computes
+(the classic double-buffer pipeline; pallas_guide §Double Buffering —
+exactly the remedy Lee et al. and Rezk et al. prescribe for RNN state on
+constrained accelerators).  The trajectory-emitting forward additionally
+streams its ``(tc, L, bm, H)`` residual chunks OUT through two staging
+buffers, so VMEM residency is O(tc) — not O(T) — in every training-path
+dispatch while weights and the ``(c, h)`` carries stay resident across
+chunks.  Chunking changes data movement only: the per-step math is the
+shared ``_step_layers`` body, so chunked and unchunked kernels are
+bit-identical (tests/test_lstm_seq.py asserts it).
+
 Autodiff: ``pallas_call`` has no VJP rule, so ``lstm_seq`` wraps the kernel
 in a ``jax.custom_vjp``.  Under differentiation the forward runs a
 trajectory-emitting variant of the kernel (same math, same single dispatch)
@@ -47,6 +62,7 @@ grads).
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -96,23 +112,44 @@ def pad_input(x: jax.Array, p_width: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 # VMEM budget — the MobiRNN packing rule applied to the whole sequence.
 # ---------------------------------------------------------------------------
+class SeqBlocks(NamedTuple):
+    """The fused kernel's tiling decision: batch tile x time residency.
+
+    ``time_chunk=None`` means the whole (T, bm, P) input block (and, in bwd,
+    the whole trajectories) stay VMEM-resident for the grid step — the
+    fastest layout when it fits.  An integer ``time_chunk=tc`` means the
+    kernel streams the time axis through double-buffered (tc, bm, P) VMEM
+    buffers instead, making residency O(tc) in sequence length."""
+    block_b: int
+    time_chunk: int | None = None
+
+
 def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
                       block_b: int, dtype_bytes: int = 4,
                       w_dtype_bytes: int | None = None,
-                      mode: str = "fwd") -> int:
+                      mode: str = "fwd",
+                      time_chunk: int | None = None) -> int:
     """Kernel working set for one grid step, per phase.
 
     ``mode="fwd"`` sizes the inference forward: stacked weights + the batch
-    tile's whole input sequence + f32 (c,h) scratch + output blocks.
+    tile's input residency + f32 (c,h) scratch + output blocks.
 
     ``mode="bwd"`` sizes the TRAINING working set — the reverse-sweep kernel
     (kernels/lstm_seq_bwd.py), which strictly dominates the
     trajectory-emitting forward that feeds it, so one number gates both
-    dispatches.  On top of the forward set it holds the two (T, L, bm, H)
-    f32 trajectory residuals, the f32 dw/db accumulator scratch (a second
-    weight-stack-sized block), the dw/db output blocks, the dx output block
-    (mirroring the input block) and the (dc, dh) carry scratch — roughly 3x
-    the forward working set at the paper's shapes.
+    dispatches.  On top of the forward set it holds the (T, L, bm, H) f32
+    trajectory residuals (or their double-buffered chunk windows), the f32
+    dw/db accumulator scratch (a second weight-stack-sized block), the
+    dw/db output blocks, the dx residency (mirroring the input) and the
+    (dc, dh) carry scratch — roughly 3x the forward working set at the
+    paper's shapes.
+
+    ``time_chunk=None`` sizes the whole-T-resident layout: the input block
+    is (T, bm, P) and the bwd trajectories are fully resident — O(T) VMEM.
+    ``time_chunk=tc`` sizes the STREAMED layout: two (tc, bm, P) input
+    buffers (prefetch + compute), and in bwd two (tc+1)-row windows per
+    trajectory plus a mirrored two-slot dx staging — O(tc) VMEM; weights,
+    carries, and dw/db accumulators stay resident across chunks either way.
 
     ``dtype_bytes`` sizes activations/outputs; ``w_dtype_bytes`` sizes the
     weight stack (defaults to ``dtype_bytes`` — pass it explicitly under
@@ -122,15 +159,24 @@ def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
     wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
     weights = n_layers * (p_width + hidden) * 4 * hidden * wb
     biases = n_layers * 4 * hidden * wb
-    x_block = block_b * seq_len * p_width * dtype_bytes
+    if time_chunk is None:
+        x_rows = seq_len                                 # whole T resident
+    else:
+        x_rows = 2 * min(time_chunk, seq_len)            # double buffer
+    x_block = block_b * x_rows * p_width * dtype_bytes
     state = 2 * n_layers * block_b * hidden * 4          # f32 scratch
     outs = 2 * n_layers * block_b * hidden * dtype_bytes
     total = weights + biases + x_block + state + outs
     if mode == "bwd":
-        traj = 2 * seq_len * n_layers * block_b * hidden * 4   # f32 residual
+        if time_chunk is None:
+            traj = 2 * seq_len * n_layers * block_b * hidden * 4  # resident
+        else:
+            tc = min(time_chunk, seq_len)
+            tw = tc + 1 if seq_len > tc else tc          # + the t-1 row
+            traj = 2 * 2 * tw * n_layers * block_b * hidden * 4  # 2 slots
         dw_scratch = weights // wb * 4 + biases // wb * 4      # f32 accum
         dw_out = weights + biases                              # param dtype
-        dx_block = x_block                                     # dx mirrors x
+        dx_block = x_block                           # dx mirrors x residency
         # (dc, dh) carries reuse `state`; the final-state cotangent blocks:
         cots = 2 * n_layers * block_b * hidden * dtype_bytes
         total += traj + dw_scratch + dw_out + dx_block + cots
@@ -141,32 +187,60 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
                        p_width: int, hidden: int, dtype_bytes: int = 4,
                        vmem_budget: int | None = None,
                        w_dtype_bytes: int | None = None,
-                       mode: str = "fwd") -> int | None:
-    """Pick the batch tile, or None when the kernel is not viable.
+                       mode: str = "fwd",
+                       allow_chunk: bool = True) -> SeqBlocks | None:
+    """Pick the (batch tile, time residency), or None when not viable.
 
-    Seeds the tile from factorization.choose_block on the per-step gate
-    matmul (B, P+H) x (P+H, 4H) — the coarsest MXU-aligned block — then
-    halves it until the sequence-resident working set fits the budget.
+    Seeds the batch tile from factorization.choose_block on the per-step
+    gate matmul (B, P+H) x (P+H, 4H) — the coarsest MXU-aligned block — then
+    searches the joint ``(block_b, time_chunk)`` surface in MobiRNN
+    coarseness order:
+
+    1. whole-T residency at the current batch tile (``time_chunk=None`` —
+       no streaming machinery at all) when it fits;
+    2. otherwise STREAM the time axis: a halving sweep from ``tc = T//2``
+       down to 1 takes the first (coarsest) chunk whose double-buffered
+       working set fits — this keeps the batch tile coarse (full MXU rows,
+       one grid step) and hides the input DMA behind compute instead of
+       multiplying grid steps;
+    3. only when even ``tc=1`` does not fit, halve the batch tile and
+       retry — shrinking bm shrinks the weight-independent terms too.
+
     ``mode="bwd"`` sizes the TRAINING working set instead (trajectory
     residuals + gradient accumulators, see ``working_set_bytes``) — under
     ``jax.grad`` this is the number that matters, and it is ~3x the forward
-    one, so a batch tile that is fine for inference can be non-viable for
-    training.  Returns None when even a bm=1 tile cannot fit — either the
-    weight stack itself blows VMEM (large H/L) or the whole-sequence input
-    block does (very large T: the kernel keeps all T timesteps resident;
-    time-tiling the input DMA is a ROADMAP open item).  Callers then fall
-    back to the per-cell kernel (fwd) or the oracle VJP (bwd).
+    one, so a tiling that is fine for inference can be non-viable for
+    training.  Returns None only when even ``(bm=1, tc=1)`` cannot fit —
+    i.e. the weight stack plus its gradient accumulators themselves blow
+    VMEM (large H/L); long T alone is no longer a reason to fall back.
+    Callers then route to the per-cell kernel (fwd) or the oracle VJP
+    (bwd).  ``allow_chunk=False`` restores the pre-streaming decision
+    surface (whole-T residency or bust) — used by benchmarks to show the
+    cliff the pipeline removes.
     """
     budget = factorization.DEFAULT_VMEM_BUDGET if vmem_budget is None \
         else vmem_budget
+
+    def fits(bm: int, tc: int | None) -> bool:
+        return working_set_bytes(seq_len, n_layers, p_width, hidden, bm,
+                                 dtype_bytes, w_dtype_bytes, mode=mode,
+                                 time_chunk=tc) <= budget
+
     bm, _, _ = factorization.choose_block(
         batch, 4 * hidden, p_width + hidden, bytes_per_elem=dtype_bytes,
         vmem_budget=budget)
     bm = min(bm, batch)
     while bm >= 1:
-        if working_set_bytes(seq_len, n_layers, p_width, hidden, bm,
-                             dtype_bytes, w_dtype_bytes, mode=mode) <= budget:
-            return bm
+        if fits(bm, None):
+            return SeqBlocks(bm, None)
+        if allow_chunk:
+            tc = max(seq_len // 2, 1)
+            while tc >= 1:
+                if fits(bm, tc):
+                    return SeqBlocks(bm, tc)
+                if tc == 1:
+                    break
+                tc //= 2
         if bm == 1:
             break
         bm = max(bm // 2, 1)
@@ -253,15 +327,178 @@ def _seq_traj_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, ct_ref,
     h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+# ---------------------------------------------------------------------------
+# Time-chunked, double-buffered kernel bodies: x stays in HBM (pltpu.ANY)
+# and streams through two (tc, bm, P) VMEM buffers; trajectory residuals
+# stream OUT through two staging buffers.  Helpers shared by fwd + traj.
+# ---------------------------------------------------------------------------
+def _x_chunk_dma(x_hbm, xbuf, xsem, slot, k, *, tc: int, seq_len: int,
+                 bm: int, ib):
+    """Async copy of input chunk k into buffer ``slot``.
+
+    The copy window is static-size ``tc`` rows with a CLAMPED start
+    (min(k*tc, T-tc)) so the tail chunk of a non-dividing T stays in
+    bounds; steps index the buffer at ``t - start``, and rows below the
+    chunk (duplicates of already-consumed steps) are simply never read.
+    ``ib`` is the batch-tile id, captured ONCE at kernel top — calling
+    ``pl.program_id`` inside a ``pl.when`` branch does not lower.
+    """
+    src = jnp.minimum(k * tc, seq_len - tc)
+    return pltpu.make_async_copy(
+        x_hbm.at[pl.ds(src, tc), pl.ds(ib * bm, bm)],
+        xbuf.at[slot], xsem.at[slot])
+
+
+def _seq_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
+                        xbuf, c_scr, h_scr, xsem,
+                        *, n_layers: int, seq_len: int, p_width: int,
+                        tc: int, nc: int):
+    """Forward with O(tc) input residency: same recurrence as ``_seq_kernel``
+    but the (T, bm, P) block never materialises — chunk k+1 prefetches while
+    chunk k computes.  x_hbm: (T, Bp, P) in HBM (batch padded to the tile
+    grid); xbuf: (2, tc, bm, P) VMEM; weights and (c, h) stay resident.
+    """
+    bm = c_scr.shape[1]
+    ib = pl.program_id(0)
+    c_scr[...] = jnp.zeros_like(c_scr)
+    h_scr[...] = jnp.zeros_like(h_scr)
+
+    def dma(slot, k):
+        return _x_chunk_dma(x_hbm, xbuf, xsem, slot, k, tc=tc,
+                            seq_len=seq_len, bm=bm, ib=ib)
+
+    dma(0, 0).start()                                    # warm-up
+
+    def chunk(k, carry):
+        slot = jax.lax.rem(k, 2)
+
+        @pl.when(k + 1 < nc)
+        def _prefetch():
+            dma(jax.lax.rem(k + 1, 2), k + 1).start()
+
+        dma(slot, k).wait()
+        src = jnp.minimum(k * tc, seq_len - tc)
+
+        def step(i, c2):
+            t = k * tc + i
+
+            @pl.when(t < seq_len)                        # tail-chunk guard
+            def _advance():
+                inp = xbuf[slot, t - src].astype(F32)    # (bm, P)
+                _step_layers(inp, w_ref, b_ref, c_scr, h_scr,
+                             n_layers=n_layers, p_width=p_width)
+            return c2
+
+        jax.lax.fori_loop(0, tc, step, 0)
+        return carry
+
+    jax.lax.fori_loop(0, nc, chunk, 0)
+    c_out_ref[...] = c_scr[...].astype(c_out_ref.dtype)
+    h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
+
+
+def _seq_traj_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
+                             ct_hbm, ht_hbm,
+                             xbuf, ctb, htb, c_scr, h_scr,
+                             xsem, csem, hsem,
+                             *, n_layers: int, seq_len: int, p_width: int,
+                             tc: int, nc: int):
+    """Trajectory-emitting forward with O(tc) residency on BOTH sides: input
+    chunks stream in, (tc, L, bm, H) trajectory chunks stream out through
+    two staging buffers each.  ct_hbm/ht_hbm are (nc*tc, L, Bp, H) in HBM —
+    time-padded so every chunk's output window is disjoint (the wrapper
+    slices [:T]); a staging slot is reused only after its previous flight
+    completes (the k-2 wait below).
+    """
+    bm = c_scr.shape[1]
+    ib = pl.program_id(0)
+    c_scr[...] = jnp.zeros_like(c_scr)
+    h_scr[...] = jnp.zeros_like(h_scr)
+
+    def dma_in(slot, k):
+        return _x_chunk_dma(x_hbm, xbuf, xsem, slot, k, tc=tc,
+                            seq_len=seq_len, bm=bm, ib=ib)
+
+    def dma_out(buf, hbm, sem, slot, k):
+        return pltpu.make_async_copy(
+            buf.at[slot],
+            hbm.at[pl.ds(k * tc, tc), :, pl.ds(ib * bm, bm)],
+            sem.at[slot])
+
+    dma_in(0, 0).start()                                 # warm-up
+
+    def chunk(k, carry):
+        slot = jax.lax.rem(k, 2)
+
+        @pl.when(k + 1 < nc)
+        def _prefetch():
+            dma_in(jax.lax.rem(k + 1, 2), k + 1).start()
+
+        dma_in(slot, k).wait()
+        # the staging slot's previous flight (chunk k-2) must land before
+        # this chunk overwrites it
+        @pl.when(k >= 2)
+        def _reclaim():
+            dma_out(ctb, ct_hbm, csem, slot, k - 2).wait()
+            dma_out(htb, ht_hbm, hsem, slot, k - 2).wait()
+
+        src = jnp.minimum(k * tc, seq_len - tc)
+
+        def step(i, c2):
+            t = k * tc + i
+
+            @pl.when(t < seq_len)                        # tail-chunk guard
+            def _advance():
+                inp = xbuf[slot, t - src].astype(F32)    # (bm, P)
+                _step_layers(inp, w_ref, b_ref, c_scr, h_scr,
+                             n_layers=n_layers, p_width=p_width)
+                ctb[slot, i] = c_scr[...]
+                htb[slot, i] = h_scr[...]
+            return c2
+
+        jax.lax.fori_loop(0, tc, step, 0)
+        dma_out(ctb, ct_hbm, csem, slot, k).start()
+        dma_out(htb, ht_hbm, hsem, slot, k).start()
+        return carry
+
+    jax.lax.fori_loop(0, nc, chunk, 0)
+    # drain the (at most two) outstanding trajectory flights
+    dma_out(ctb, ct_hbm, csem, jax.lax.rem(nc - 1, 2), nc - 1).wait()
+    dma_out(htb, ht_hbm, hsem, jax.lax.rem(nc - 1, 2), nc - 1).wait()
+
+    @pl.when(nc >= 2)
+    def _drain_prev():
+        dma_out(ctb, ct_hbm, csem, jax.lax.rem(nc - 2, 2), nc - 2).wait()
+        dma_out(htb, ht_hbm, hsem, jax.lax.rem(nc - 2, 2), nc - 2).wait()
+
+    c_out_ref[...] = c_scr[...].astype(c_out_ref.dtype)
+    h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
+
+
+def _pad_batch(a: jax.Array, axis: int, padded: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``a`` to length ``padded`` (manual-DMA kernels
+    address batch tiles themselves, so the tile grid must divide exactly —
+    garbage rows are masked/sliced, never computed into shared state)."""
+    if a.shape[axis] == padded:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, padded - a.shape[axis])
+    return jnp.pad(a, pads)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "time_chunk", "interpret"))
 def _lstm_seq_call(w: jax.Array, b: jax.Array, x: jax.Array,
-                   block_b: int, interpret: bool
+                   block_b: int, time_chunk: int | None, interpret: bool
                    ) -> tuple[jax.Array, jax.Array]:
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H
     B, T, _ = x.shape
     bm = min(block_b, B)
     xt = jnp.swapaxes(x, 0, 1)                           # (T, B, P)
+    if time_chunk is not None:
+        return _lstm_seq_chunked_call(w, b, xt, bm, min(time_chunk, T),
+                                      interpret)
     out = jax.ShapeDtypeStruct((L, B, H), x.dtype)
     kernel = functools.partial(_seq_kernel, n_layers=L, seq_len=T,
                                p_width=P)
@@ -286,18 +523,62 @@ def _lstm_seq_call(w: jax.Array, b: jax.Array, x: jax.Array,
     )(xt, w, b)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _lstm_seq_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Streamed forward: x lives in HBM, VMEM holds O(tc) of it."""
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    T, B, _ = xt.shape
+    n_tiles = pl.cdiv(B, bm)
+    Bp = n_tiles * bm
+    nc = pl.cdiv(T, tc)
+    xt = _pad_batch(xt, 1, Bp)
+    out = jax.ShapeDtypeStruct((L, Bp, H), xt.dtype)
+    kernel = functools.partial(_seq_chunked_kernel, n_layers=L, seq_len=T,
+                               p_width=P, tc=tc, nc=nc)
+    c, h = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),        # x streams manually
+            pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+        ],
+        out_shape=[out, out],
+        scratch_shapes=[
+            pltpu.VMEM((2, tc, bm, P), xt.dtype),        # double buffer
+            pltpu.VMEM((L, bm, H), F32),
+            pltpu.VMEM((L, bm, H), F32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(xt, w, b)
+    return c[:, :B], h[:, :B]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "time_chunk", "interpret"))
 def _lstm_seq_traj_call(w: jax.Array, b: jax.Array, x: jax.Array,
-                        block_b: int, interpret: bool
+                        block_b: int, interpret: bool,
+                        time_chunk: int | None = None
                         ) -> tuple[jax.Array, jax.Array, jax.Array,
                                    jax.Array]:
     """Trajectory-emitting forward: (c, h, c_traj, h_traj), still ONE
-    dispatch.  Trajectories are (T, L, B, H) f32 — the residual contract."""
+    dispatch.  Trajectories are (T, L, B, H) f32 — the residual contract,
+    identical (bit-for-bit) whether the kernel holds T resident
+    (``time_chunk=None``) or streams it in chunks."""
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H
     B, T, _ = x.shape
     bm = min(block_b, B)
     xt = jnp.swapaxes(x, 0, 1)                           # (T, B, P)
+    if time_chunk is not None:
+        return _lstm_seq_traj_chunked_call(w, b, xt, bm, min(time_chunk, T),
+                                           interpret)
     out = jax.ShapeDtypeStruct((L, B, H), x.dtype)
     traj = jax.ShapeDtypeStruct((T, L, B, H), F32)
     kernel = functools.partial(_seq_traj_kernel, n_layers=L, seq_len=T,
@@ -325,28 +606,76 @@ def _lstm_seq_traj_call(w: jax.Array, b: jax.Array, x: jax.Array,
     )(xt, w, b)
 
 
+def _lstm_seq_traj_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
+                                ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                           jax.Array]:
+    """Streamed trajectory forward: O(tc) VMEM for input AND residuals."""
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    T, B, _ = xt.shape
+    n_tiles = pl.cdiv(B, bm)
+    Bp = n_tiles * bm
+    nc = pl.cdiv(T, tc)
+    Tp = nc * tc              # time-padded so chunk windows are disjoint
+    xt = _pad_batch(xt, 1, Bp)
+    out = jax.ShapeDtypeStruct((L, Bp, H), xt.dtype)
+    traj = jax.ShapeDtypeStruct((Tp, L, Bp, H), F32)
+    kernel = functools.partial(_seq_traj_chunked_kernel, n_layers=L,
+                               seq_len=T, p_width=P, tc=tc, nc=nc)
+    c, h, ct, ht = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),        # x streams manually
+            pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((L, bm, H), lambda ib: (0, ib, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),        # traj streams out
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[out, out, traj, traj],
+        scratch_shapes=[
+            pltpu.VMEM((2, tc, bm, P), xt.dtype),        # x double buffer
+            pltpu.VMEM((2, tc, L, bm, H), F32),          # c_traj staging
+            pltpu.VMEM((2, tc, L, bm, H), F32),          # h_traj staging
+            pltpu.VMEM((L, bm, H), F32),
+            pltpu.VMEM((L, bm, H), F32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(xt, w, b)
+    return c[:, :B], h[:, :B], ct[:T, :, :B], ht[:T, :, :B]
+
+
 # ---------------------------------------------------------------------------
 # Differentiable entry point
 # ---------------------------------------------------------------------------
-#: bwd_block_b sentinel: "no viable backward tile — use the oracle VJP".
+#: bwd spec sentinel: "no viable backward tiling — use the oracle VJP".
 ORACLE_BWD = 0
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _lstm_seq(w, b, x, block_b, bwd_block_b, interpret):
-    return _lstm_seq_call(w, b, x, block_b, interpret)
+def _lstm_seq(w, b, x, fwd_spec, bwd_spec, interpret):
+    return _lstm_seq_call(w, b, x, fwd_spec[0], fwd_spec[1], interpret)
 
 
-def _lstm_seq_fwd(w, b, x, block_b, bwd_block_b, interpret):
-    if bwd_block_b == ORACLE_BWD:
+def _lstm_seq_fwd(w, b, x, fwd_spec, bwd_spec, interpret):
+    if bwd_spec == ORACLE_BWD:
         # backward working set does not fit VMEM: plain forward, oracle VJP
-        return _lstm_seq_call(w, b, x, block_b, interpret), (w, b, x)
-    c, h, ct, ht = _lstm_seq_traj_call(w, b, x, bwd_block_b, interpret)
+        return (_lstm_seq_call(w, b, x, fwd_spec[0], fwd_spec[1], interpret),
+                (w, b, x))
+    c, h, ct, ht = _lstm_seq_traj_call(w, b, x, bwd_spec[0], interpret,
+                                       time_chunk=bwd_spec[1])
     return (c, h), (w, b, x, ct, ht)
 
 
-def _lstm_seq_bwd(block_b, bwd_block_b, interpret, residuals, cotangents):
-    if bwd_block_b == ORACLE_BWD:
+def _lstm_seq_bwd(fwd_spec, bwd_spec, interpret, residuals, cotangents):
+    if bwd_spec == ORACLE_BWD:
         from repro.kernels import ref
         w, b, x = residuals
         _, vjp = jax.vjp(ref.lstm_seq, w, b, x)
@@ -355,14 +684,17 @@ def _lstm_seq_bwd(block_b, bwd_block_b, interpret, residuals, cotangents):
     w, b, x, ct, ht = residuals
     dc, dh = cotangents
     return bwd_lib.lstm_seq_bwd(w, b, x, ct, ht, dc, dh,
-                                block_b=bwd_block_b, interpret=interpret)
+                                block_b=bwd_spec[0], time_chunk=bwd_spec[1],
+                                interpret=interpret)
 
 
 _lstm_seq.defvjp(_lstm_seq_fwd, _lstm_seq_bwd)
 
 
 def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
-             block_b: int | None = None, bwd_block_b: int | None = None,
+             block_b: int | None = None, time_chunk: int | None = None,
+             bwd_block_b: int | None = None,
+             bwd_time_chunk: int | None = None,
              interpret: bool = True) -> tuple[jax.Array, jax.Array]:
     """Whole-sequence stacked LSTM in ONE kernel dispatch.
 
@@ -370,13 +702,22 @@ def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
     x: (B, T, P) input zero-padded to width P (pad_input).
     Returns final (c, h), each (L, B, H).  Oracle: kernels/ref.lstm_seq.
 
-    ``bwd_block_b`` is the batch tile for the TRAINING path (the
+    When ``block_b`` is None the ``(block_b, time_chunk)`` tiling comes
+    from ``choose_batch_block`` — whole-T residency when it fits, streamed
+    time chunks otherwise; an explicit ``time_chunk`` still pins the time
+    layout (only the batch tile is chosen).  An explicit ``block_b`` pins
+    the batch tile and ``time_chunk`` then selects the layout directly
+    (None = whole-T resident; tc = double-buffered streaming), still ONE
+    dispatch either way.
+
+    ``bwd_block_b``/``bwd_time_chunk`` tile the TRAINING path (the
     trajectory-emitting forward + the reverse-sweep kernel, each ONE
-    dispatch); defaults to ``choose_batch_block(mode="bwd")``.  Pass
-    ``ORACLE_BWD`` (0) to force the oracle-VJP fallback — which is also what
-    happens automatically when no backward tile fits the VMEM budget.
-    Inference through ``lstm_seq`` never pays for residuals: the trajectory
-    variant only runs under differentiation (custom_vjp fwd rule).
+    dispatch); defaults come from ``choose_batch_block(mode="bwd")``.  Pass
+    ``bwd_block_b=ORACLE_BWD`` (0) to force the oracle-VJP fallback — which
+    is also what happens automatically when even a ``(bm=1, tc=1)`` backward
+    tiling cannot fit the VMEM budget.  Inference through ``lstm_seq`` never
+    pays for residuals: the trajectory variant only runs under
+    differentiation (custom_vjp fwd rule).
     """
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H
@@ -385,16 +726,30 @@ def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
     dtype_bytes = jnp.dtype(x.dtype).itemsize
     w_bytes = jnp.dtype(w.dtype).itemsize
     if block_b is None:
-        block_b = choose_batch_block(
+        blocks = choose_batch_block(
             B, T, L, P, H, dtype_bytes=dtype_bytes, w_dtype_bytes=w_bytes)
-        if block_b is None:
+        if blocks is None:
             raise ValueError(
                 f"sequence-resident working set (L={L}, P+H={P + H}, "
-                f"4H={4 * H}, T={T}) exceeds the VMEM budget even at "
-                "batch tile 1; use the per-cell fallback "
+                f"4H={4 * H}) exceeds the VMEM budget even at batch tile 1 "
+                "with tc=1 time streaming; use the per-cell fallback "
                 "(core/lstm.forward_fused_seq routes this automatically)")
+        block_b = blocks.block_b
+        if time_chunk is None:         # explicit time_chunk survives auto-bm
+            time_chunk = blocks.time_chunk
+    fwd_spec = (block_b, time_chunk)
     if bwd_block_b is None:
-        bwd_block_b = choose_batch_block(
+        bwd_blocks = choose_batch_block(
             B, T, L, P, H, dtype_bytes=dtype_bytes, w_dtype_bytes=w_bytes,
-            mode="bwd") or ORACLE_BWD
-    return _lstm_seq(w, b, x, block_b, bwd_block_b, interpret)
+            mode="bwd")
+        if bwd_blocks is None:
+            bwd_spec = ORACLE_BWD
+        elif bwd_time_chunk is not None:
+            bwd_spec = (bwd_blocks.block_b, bwd_time_chunk)
+        else:
+            bwd_spec = tuple(bwd_blocks)
+    elif bwd_block_b == ORACLE_BWD:
+        bwd_spec = ORACLE_BWD
+    else:
+        bwd_spec = (bwd_block_b, bwd_time_chunk)
+    return _lstm_seq(w, b, x, fwd_spec, bwd_spec, interpret)

@@ -31,23 +31,30 @@ def lstm_cell(w: jax.Array, b: jax.Array, x: jax.Array, c: jax.Array,
 
 def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
              interpret: bool = True, block_b: int | None = None,
-             bwd_block_b: int | None = None
+             time_chunk: int | None = None,
+             bwd_block_b: int | None = None,
+             bwd_time_chunk: int | None = None
              ) -> tuple[jax.Array, jax.Array]:
     """Whole-sequence stacked LSTM — ONE kernel dispatch for all T steps
     (and, under ``jax.grad``, ONE reverse-sweep dispatch for the backward).
 
     w: (L, P+H, 4H) stacked weights (lstm_seq.stack_params); b: (L, 4H);
     x: (B, T, P) padded input.  Returns final (c, h), each (L, B, H).
-    ``bwd_block_b`` is the training-path batch tile (defaults to
-    ``choose_batch_block(mode="bwd")``; 0 forces the oracle-VJP fallback).
-    Raises ValueError when the weight stack exceeds the VMEM budget —
-    callers route to the per-cell ``lstm_cell`` fallback (see
-    core/lstm.forward_fused_seq, which automates both the stacking and
-    the fallback).
+    ``block_b``/``time_chunk`` tile the forward (None = auto via
+    ``choose_batch_block``: whole-T VMEM residency when it fits, otherwise
+    double-buffered time streaming); ``bwd_block_b``/``bwd_time_chunk``
+    tile the training path (``bwd_block_b=0`` forces the oracle-VJP
+    fallback).  Raises ValueError when the weight stack exceeds the VMEM
+    budget even at (bm=1, tc=1) — callers route to the per-cell
+    ``lstm_cell`` fallback (see core/lstm.forward_fused_seq, which
+    automates both the stacking and the fallback).
     """
     from repro.kernels import lstm_seq as _lstm_seq
     return _lstm_seq.lstm_seq(w, b, x, block_b=block_b,
-                              bwd_block_b=bwd_block_b, interpret=interpret)
+                              time_chunk=time_chunk,
+                              bwd_block_b=bwd_block_b,
+                              bwd_time_chunk=bwd_time_chunk,
+                              interpret=interpret)
 
 
 def wkv6(r, k, v, logw, u, state, *, chunk: int = 32,

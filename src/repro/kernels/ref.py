@@ -72,6 +72,12 @@ def lstm_seq_traj(w: jax.Array, b: jax.Array, x: jax.Array
     because the backward kernel recomputes gates from them and the
     recompute must be bit-identical to the forward.
     Returns (c, h, c_traj, h_traj) with (c, h) exactly ``lstm_seq``'s.
+
+    The contract is LAYOUT-INVARIANT: the time-chunked kernels (which
+    stream the trajectories through VMEM in (tc, L, B, H) windows instead
+    of holding T resident) emit and consume exactly these arrays — chunking
+    changes data movement, never the residual values, so this single oracle
+    specifies every (block_b, time_chunk) configuration.
     """
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H

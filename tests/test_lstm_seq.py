@@ -57,15 +57,27 @@ def test_batch_tiling_invariance():
 # VMEM budget routing
 # ---------------------------------------------------------------------------
 def test_choose_batch_block_budget():
-    # generous budget: viable, batch tile at most the batch
-    bm = lstm_seq.choose_batch_block(8, 128, 2, 32, 32)
-    assert bm is not None and 1 <= bm <= 8
-    # shrink the budget until only smaller tiles fit
-    ws_full = lstm_seq.working_set_bytes(128, 2, 32, 32, 8)
-    bm_small = lstm_seq.choose_batch_block(8, 128, 2, 32, 32,
+    # generous budget: viable, whole-T resident (no streaming machinery)
+    blocks = lstm_seq.choose_batch_block(8, 128, 2, 32, 32)
+    assert blocks is not None and 1 <= blocks.block_b <= 8
+    assert blocks.time_chunk is None
+    # shrink the budget below whole-T residency: the table STREAMS the time
+    # axis at the same coarse batch tile instead of shrinking it
+    ws_full = lstm_seq.working_set_bytes(128, 2, 32, 32, blocks.block_b)
+    streamed = lstm_seq.choose_batch_block(8, 128, 2, 32, 32,
                                            vmem_budget=ws_full - 1)
-    assert bm_small is not None and bm_small < 8
-    # budget below the bare weight stack: not viable at all
+    assert streamed is not None and streamed.block_b == blocks.block_b
+    assert streamed.time_chunk is not None and streamed.time_chunk < 128
+    assert lstm_seq.working_set_bytes(
+        128, 2, 32, 32, streamed.block_b,
+        time_chunk=streamed.time_chunk) <= ws_full - 1
+    # allow_chunk=False restores the pre-streaming table: shrink bm or bust
+    nochunk = lstm_seq.choose_batch_block(8, 128, 2, 32, 32,
+                                          vmem_budget=ws_full - 1,
+                                          allow_chunk=False)
+    assert nochunk is None or nochunk.block_b < blocks.block_b
+    # budget below the bare weight stack: not viable at all — the ONLY
+    # remaining "on None" row of the decision table
     assert lstm_seq.choose_batch_block(8, 128, 2, 32, 32,
                                        vmem_budget=1024) is None
 
@@ -188,8 +200,10 @@ def test_bwd_oracle_fallback_forced_and_automatic():
     fwd_ws = lstm_seq.working_set_bytes(5, 2, 16, 16, 3, mode="fwd")
     bwd_ws = lstm_seq.working_set_bytes(5, 2, 16, 16, 3, mode="bwd")
     assert bwd_ws > fwd_ws
-    assert lstm_seq.choose_batch_block(3, 5, 2, 16, 16,
-                                       vmem_budget=fwd_ws) == 3
+    assert lstm_seq.choose_batch_block(
+        3, 5, 2, 16, 16, vmem_budget=fwd_ws) == lstm_seq.SeqBlocks(3, None)
+    # at short T the bwd set is dominated by the dw/db accumulators, which
+    # time-chunking cannot shrink — still None under the fwd-sized budget
     assert lstm_seq.choose_batch_block(3, 5, 2, 16, 16, vmem_budget=fwd_ws,
                                        mode="bwd") is None
 
@@ -244,3 +258,100 @@ def test_train_dispatch_count_O1():
         lambda w: _loss(lambda *a: lstm_seq.lstm_seq(
             *a, bwd_block_b=lstm_seq.ORACLE_BWD))(w, b, xp), w)
     assert n_fallback == 1      # oracle bwd is jnp-only: just the fwd kernel
+
+
+# ---------------------------------------------------------------------------
+# Time streaming (double-buffered chunk pipeline): chunking changes data
+# movement ONLY — every chunked kernel is bit-identical to its
+# whole-T-resident twin, including across chunk boundaries.
+# ---------------------------------------------------------------------------
+# T=7 makes tc=2/3 non-dividing (odd tail chunk), tc=7 the single-chunk
+# degenerate (tc=T), and tc=16 the clamped-past-T case.
+@pytest.mark.parametrize("tc", [1, 2, 3, 7, 16])
+def test_chunked_forward_bit_identical(tc):
+    w, b, xp, _ = _make(2, 16, 9, 3, 7)
+    want = lstm_seq.lstm_seq(w, b, xp, block_b=2)
+    got = lstm_seq.lstm_seq(w, b, xp, block_b=2, time_chunk=tc)
+    for a, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+@pytest.mark.parametrize("tc", [1, 3, 7])
+def test_chunked_traj_bit_identical(tc):
+    """The streamed trajectory-emitting forward honours the residual
+    contract exactly: final state AND both (T, L, B, H) f32 trajectories
+    equal the whole-T-resident kernel's bit-for-bit (the backward's gate
+    recompute depends on it)."""
+    w, b, xp, _ = _make(2, 16, 9, 3, 7)
+    want = lstm_seq._lstm_seq_traj_call(w, b, xp, 2, True)
+    got = lstm_seq._lstm_seq_traj_call(w, b, xp, 2, True, time_chunk=tc)
+    for a, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+@pytest.mark.parametrize("tc", [1, 2, 3, 7])
+def test_chunked_grads_bit_identical(tc):
+    """Carry regression: the (c, h) carry crossing forward chunk boundaries
+    and the (dc, dh) carry crossing reverse-sweep chunk boundaries leave
+    gradients EXACTLY equal to the unchunked kernels' — streamed training
+    is the same function, not an approximation of it."""
+    w, b, xp, _ = _make(2, 16, 9, 3, 7)
+    g_res = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq(
+        w, b, x, bwd_block_b=2)), argnums=(0, 1, 2))(w, b, xp)
+    g_chn = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq(
+        w, b, x, bwd_block_b=2, bwd_time_chunk=tc)),
+        argnums=(0, 1, 2))(w, b, xp)
+    for a, r in zip(g_chn, g_res):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+def test_chunked_bwd_batch_tiling_invariance():
+    """Streaming composes with batch tiling: non-dividing batch tiles (the
+    masked shared-accumulator path) under chunked fwd AND bwd still match
+    the oracle grads."""
+    w, b, xp, _ = _make(2, 16, 9, 5, 6)
+    gr = jax.grad(_loss(ref.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
+    for block_b in (2, 3, 5):
+        gk = jax.grad(_loss(lambda w, b, x, bb=block_b: lstm_seq.lstm_seq(
+            w, b, x, block_b=bb, time_chunk=2, bwd_block_b=bb,
+            bwd_time_chunk=2)), argnums=(0, 1, 2))(w, b, xp)
+        for a, r in zip(gk, gr):
+            np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-5)
+
+
+def test_explicit_time_chunk_survives_auto_block_b():
+    """Regression: ``time_chunk``/``bwd_time_chunk`` given WITHOUT a batch
+    tile must still stream — the auto-chosen ``block_b`` must not silently
+    overwrite the caller's layout with whole-T residency."""
+    w, b, xp, _ = _make(2, 16, 9, 3, 7)
+    jx_resident = str(jax.make_jaxpr(
+        lambda w, b, x: lstm_seq.lstm_seq(w, b, x))(w, b, xp))
+    jx_streamed = str(jax.make_jaxpr(lambda w, b, x: lstm_seq.lstm_seq(
+        w, b, x, time_chunk=3))(w, b, xp))
+    assert jx_streamed != jx_resident        # streaming actually engaged
+    got = lstm_seq.lstm_seq(w, b, xp, time_chunk=3)
+    want = lstm_seq.lstm_seq(w, b, xp)
+    for a, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+    g_stream = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq(
+        w, b, x, bwd_time_chunk=3)), argnums=(0, 1, 2))(w, b, xp)
+    g_res = jax.grad(_loss(lstm_seq.lstm_seq), argnums=(0, 1, 2))(w, b, xp)
+    for a, r in zip(g_stream, g_res):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+def test_chunked_dispatch_counts_unchanged():
+    """The chunk loop lives INSIDE the kernel: streaming never multiplies
+    dispatches — still 1 forward, still 2 per value_and_grad."""
+    from repro.analysis import count_train_dispatches
+
+    w, b, xp, _ = _make(2, 8, 5, 2, 6)
+    n = count_kernel_dispatches(jax.make_jaxpr(
+        lambda w, b, x: lstm_seq.lstm_seq(
+            w, b, x, block_b=2, time_chunk=2))(w, b, xp))
+    assert n == 1
+    n_train = count_train_dispatches(
+        lambda w: _loss(lambda *a: lstm_seq.lstm_seq(
+            *a, block_b=2, time_chunk=2, bwd_block_b=2,
+            bwd_time_chunk=2))(w, b, xp), w)
+    assert n_train == 2

@@ -144,3 +144,72 @@ def test_value_and_grad_dispatches_O1_in_T():
                                forward=lstm.FORWARD_PLANS["fused_cell"]),
         params)
     assert n_cell == 6 * 2, n_cell
+
+
+# ---------------------------------------------------------------------------
+# Long-T time streaming (ISSUE 4 acceptance): past the whole-T-resident VMEM
+# budget the plan STREAMS the time axis instead of falling back — no
+# fused_cell reroute, no oracle-VJP backward.
+# ---------------------------------------------------------------------------
+#: The mobile-class budget where the seed config's whole-T-resident working
+#: set falls off by T=512 (bwd) / T=2048 (fwd) while the chunked table
+#: stays viable — same constant the CI smoke (benchmarks/run.py
+#: --stream-smoke) runs at.
+from repro.core.factorization import MOBILE_VMEM_BUDGET as _STREAM_BUDGET
+
+
+def test_long_T_budget_table_streams_instead_of_falling_back():
+    """Pure budget math: at (T, budget) pairs where whole-T residency does
+    not fit even at batch tile 1, ``choose_batch_block`` returns a viable
+    ``(block_b, time_chunk)`` — and keeps the batch tile coarse."""
+    from repro.kernels import lstm_seq as seq_lib
+
+    cfg = LSTMConfig()
+    p_width = max(cfg.input_dim, cfg.hidden)
+    for T, mode in ((512, "bwd"), (2048, "fwd"), (2048, "bwd")):
+        nochunk = seq_lib.choose_batch_block(
+            2, T, cfg.n_layers, p_width, cfg.hidden,
+            vmem_budget=_STREAM_BUDGET, mode=mode, allow_chunk=False)
+        assert nochunk is None, (T, mode, nochunk)   # the old cliff
+        blocks = seq_lib.choose_batch_block(
+            2, T, cfg.n_layers, p_width, cfg.hidden,
+            vmem_budget=_STREAM_BUDGET, mode=mode)
+        assert blocks is not None and blocks.time_chunk is not None, (T, mode)
+        assert blocks.block_b == 2, blocks            # batch stays coarse
+        assert seq_lib.working_set_bytes(
+            T, cfg.n_layers, p_width, cfg.hidden, blocks.block_b,
+            mode=mode, time_chunk=blocks.time_chunk) <= _STREAM_BUDGET
+
+
+@pytest.mark.slow
+def test_long_T_streamed_plan_matches_sequential():
+    """Executed acceptance: at T=512 under the mobile-class budget — where
+    the pre-streaming table dropped the backward to the oracle VJP — the
+    plan stays fused_seq end-to-end (1 fwd dispatch, 2 train dispatches)
+    and fwd + gradients match the sequential oracle."""
+    from repro.analysis import count_kernel_dispatches, count_train_dispatches
+
+    cfg, params, x = _setup((2, 512, 32, 9, 2), "float32")
+    labels = jnp.array([0, 1])
+
+    def fwd(p, x, cfg):
+        return lstm.forward_fused_seq(p, x, cfg,
+                                      vmem_budget=_STREAM_BUDGET)
+
+    n_fwd = count_kernel_dispatches(jax.make_jaxpr(
+        lambda p, x: fwd(p, x, cfg))(params, x))
+    n_train = count_train_dispatches(
+        lambda p: lstm.loss_fn(p, x, labels, cfg, forward=fwd), params)
+    assert (n_fwd, n_train) == (1, 2), (n_fwd, n_train)
+
+    want = lstm.forward_sequential(params, x, cfg)
+    got = fwd(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    gw = _grads("sequential", cfg, params, x, labels)
+    _, gg = jax.value_and_grad(
+        lambda p: lstm.loss_fn(p, x, labels, cfg, forward=fwd))(params)
+    for a, w in zip(jax.tree.leaves(gg), jax.tree.leaves(gw)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=2e-4, atol=2e-4)

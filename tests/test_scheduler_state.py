@@ -102,23 +102,51 @@ def test_plan_viability_train_mode_is_stricter():
     residuals + gradient accumulators), so there is a budget window where
     the plan is viable for inference but NOT for training — a train-time
     scheduler must pass train=True or it will pick a plan whose backward
-    silently drops to the oracle replay."""
+    silently drops to the oracle replay.  With time streaming the window
+    is the gap between the two modes' (bm=1, tc=1) FLOORS — the f32 dw/db
+    accumulators and gradient outputs that no amount of chunking can
+    shrink — narrower than the old whole-T-resident gap, but still there."""
     from repro.configs import MOBIRNN_LSTM
     from repro.core import lstm
     from repro.kernels import lstm_seq as seq_lib
 
     cfg = MOBIRNN_LSTM
     p_width = max(cfg.input_dim, cfg.hidden)
-    fwd_ws = seq_lib.working_set_bytes(cfg.seq_len, cfg.n_layers, p_width,
-                                       cfg.hidden, 8, mode="fwd")
-    infer = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=fwd_ws)
-    train = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=fwd_ws,
+    floor = dict(block_b=1, mode="bwd", time_chunk=1)
+    bwd_floor = seq_lib.working_set_bytes(
+        cfg.seq_len, cfg.n_layers, p_width, cfg.hidden, **floor)
+    budget = bwd_floor - 1
+    infer = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=budget)
+    train = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=budget,
                                 train=True)
     assert infer("fused_seq")
     assert not train("fused_seq")
     assert train("fused_cell") and train("sequential")  # fallbacks stay
     # with a real budget both modes admit the plan
     assert lstm.plan_viability(cfg, 8, cfg.seq_len, train=True)("fused_seq")
+
+
+def test_plan_viability_long_T_streams_instead_of_filtering():
+    """The (block_b, time_chunk) decision table makes the Fig 7 viability
+    surface T-independent: long sequences stream the time axis through
+    double-buffered chunks instead of disqualifying fused_seq — only a
+    weight stack (plus gradient accumulators under train=True) that blows
+    the budget at (bm=1, tc=1) still filters it out."""
+    from repro.configs import MOBIRNN_LSTM
+    from repro.core import lstm
+    from repro.core.factorization import MOBILE_VMEM_BUDGET
+
+    cfg = MOBIRNN_LSTM
+    budget = MOBILE_VMEM_BUDGET   # whole-T bwd falls off it by T=512
+    for T in (128, 512, 2048, 8192):
+        for train in (False, True):
+            ok = lstm.plan_viability(cfg, 2, T, vmem_budget=budget,
+                                     train=train)
+            assert ok("fused_seq"), (T, train)
+    # the weight-stack floor is the only remaining filter
+    floor = lstm.plan_viability(cfg, 2, 128, vmem_budget=16 << 10)
+    assert not floor("fused_seq")
+    assert floor("fused_cell") and floor("sequential")
 
 
 # ---------------------------------------------------------------------------
