@@ -1,0 +1,72 @@
+"""Dispatch-count regression guard for CI.
+
+MobiRNN's whole thesis is that dispatch count is the enemy on constrained
+accelerators, so it is the one benchmark quantity that must NEVER regress
+silently.  This checker diffs the ``dispatch``/``train_dispatch`` rows of a
+fresh ``benchmarks/run.py --json`` output against a committed baseline
+(e.g. BENCH_PR4.json) and exits non-zero on ANY increase — a fused plan
+quietly falling back to the per-cell kernel or the oracle VJP shows up here
+as a count jump (1 -> T*L, 2 -> T*L), long before wall-clock noise would.
+
+Usage:
+    python benchmarks/check_dispatch_regression.py NEW.json BASELINE.json
+
+Rows are matched by name; only rows whose name contains ``dispatch`` are
+compared (their ``us_per_call`` field IS the pallas_call count — see
+benchmarks/run.py fig2/quant rows).  Rows present only in NEW (new
+coverage, e.g. quant_* rows against an older baseline) pass with a note;
+baseline dispatch rows MISSING from NEW fail — dropped coverage is how a
+regression hides.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load_dispatch_rows(path: str) -> dict[str, float]:
+    with open(path) as fh:
+        rows = json.load(fh)
+    return {r["name"]: float(r["us_per_call"]) for r in rows
+            if "dispatch" in r["name"]}
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    new_path, base_path = argv[1], argv[2]
+    new = load_dispatch_rows(new_path)
+    base = load_dispatch_rows(base_path)
+    if not base:
+        print(f"FAIL: no dispatch rows in baseline {base_path}")
+        return 1
+    failures = []
+    improved = []
+    for name, want in sorted(base.items()):
+        if name not in new:
+            failures.append(f"{name}: missing from {new_path} "
+                            f"(baseline={want:.0f}) — dropped coverage")
+            continue
+        got = new[name]
+        if got > want:
+            failures.append(f"{name}: {want:.0f} -> {got:.0f} (REGRESSION)")
+        elif got < want:
+            improved.append(f"{name}: {want:.0f} -> {got:.0f}")
+    extra = sorted(set(new) - set(base))
+    print(f"compared {len(base)} dispatch rows "
+          f"({new_path} vs {base_path})")
+    for line in improved:
+        print(f"  improved: {line}")
+    for name in extra:
+        print(f"  new coverage (no baseline): {name}={new[name]:.0f}")
+    if failures:
+        for line in failures:
+            print(f"  FAIL: {line}")
+        return 1
+    print("OK: no dispatch-count regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

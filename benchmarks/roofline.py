@@ -95,6 +95,11 @@ def fused_lstm_stream_table(batch: int = 8, hidden: int = 128,
     ``t_mem`` dominates, a deeper chunk cannot help — the kernel is
     genuinely bandwidth-bound; when ``t_comp`` dominates, the streaming is
     free (fully hidden behind the MXU work).
+
+    The ``fwd_q8``/``bwd_q8`` rows repeat the table for the int8-weight
+    plan (``fused_seq_q8``): the streamed weight term is ~4x smaller and
+    the chosen tiling no finer, so the rows show how much of the bandwidth
+    bound quantization buys back at each T.
     """
     from repro import analysis
     from repro.kernels import lstm_seq as seq_lib
@@ -103,24 +108,27 @@ def fused_lstm_stream_table(batch: int = 8, hidden: int = 128,
     rows = [("mode", "T", "blocks(bm,tc)", "resident", "streamed",
              "t_comp", "t_mem", "bound")]
     for mode in ("fwd", "bwd"):
-        for T in (128, 512, 2048, 8192):
-            blocks = seq_lib.choose_batch_block(
-                batch, T, n_layers, p_width, hidden, mode=mode)
-            if blocks is None:
-                rows.append((mode, T, "none (per-cell/oracle)", "-", "-",
-                             "-", "-", "-"))
-                continue
-            costs = analysis.lstm_seq_stream_costs(
-                T, n_layers, p_width, hidden, batch, blocks.block_b,
-                blocks.time_chunk, mode=mode)
-            bound = ("memory" if costs["t_memory"] > costs["t_compute"]
-                     else "compute")
-            rows.append((
-                mode, T, f"({blocks.block_b},{blocks.time_chunk})",
-                f"{costs['vmem_resident_bytes'] / 2**20:.2f}MB",
-                f"{costs['hbm_bytes'] / 2**20:.2f}MB",
-                fmt_seconds(costs["t_compute"]),
-                fmt_seconds(costs["t_memory"]), bound))
+        for quantized in (False, True):
+            label = mode + ("_q8" if quantized else "")
+            for T in (128, 512, 2048, 8192):
+                blocks = seq_lib.choose_batch_block(
+                    batch, T, n_layers, p_width, hidden, mode=mode,
+                    quantized=quantized)
+                if blocks is None:
+                    rows.append((label, T, "none (per-cell/oracle)", "-",
+                                 "-", "-", "-", "-"))
+                    continue
+                costs = analysis.lstm_seq_stream_costs(
+                    T, n_layers, p_width, hidden, batch, blocks.block_b,
+                    blocks.time_chunk, mode=mode, quantized=quantized)
+                bound = ("memory" if costs["t_memory"] > costs["t_compute"]
+                         else "compute")
+                rows.append((
+                    label, T, f"({blocks.block_b},{blocks.time_chunk})",
+                    f"{costs['vmem_resident_bytes'] / 2**20:.2f}MB",
+                    f"{costs['hbm_bytes'] / 2**20:.2f}MB",
+                    fmt_seconds(costs["t_compute"]),
+                    fmt_seconds(costs["t_memory"]), bound))
     widths = [max(len(str(row[i])) for row in rows)
               for i in range(len(rows[0]))]
     lines = []

@@ -254,6 +254,141 @@ def bench_stream_smoke() -> None:
         f"bwd_blocks={tuple(bwd_blocks)},budget={STREAM_BUDGET}")
 
 
+def bench_quant_rows() -> None:
+    """quant/* rows: what int8 weights buy on the (T, 320K-budget) surface.
+
+    For each T, fwd and bwd: the f32 vs q8 ``(block_b, time_chunk)`` choice
+    under STREAM_BUDGET (the widened whole-T-resident window shows as
+    ``tc=None`` where f32 already streams, and as coarser chunks past
+    that), the streamed HBM bytes of the chosen tiling (the quartered
+    weight term), and the q8 plan's dispatch counts — still 1 fwd / 2 train
+    at every T (quantization happens in jnp outside the kernels).
+    """
+    from repro.analysis import (count_kernel_dispatches,
+                                count_train_dispatches,
+                                lstm_seq_stream_costs)
+    from repro.kernels import lstm_seq as seq_lib
+
+    cfg = MOBIRNN_LSTM
+    B = 2
+    p_width = max(cfg.input_dim, cfg.hidden)
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    for T in (128, 512, 1024, 2048):
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.input_dim))
+        labels = jnp.zeros((B,), jnp.int32)
+        n_fwd = count_kernel_dispatches(jax.make_jaxpr(
+            lambda p, x: lstm.forward_fused_seq_q8(
+                p, x, cfg, vmem_budget=STREAM_BUDGET))(params, x))
+        n_train = count_train_dispatches(
+            lambda p: lstm.loss_fn(
+                p, x, labels, cfg,
+                forward=lambda p, x, cfg: lstm.forward_fused_seq_q8(
+                    p, x, cfg, vmem_budget=STREAM_BUDGET)),
+            params)
+        row(f"quant/dispatch_fused_seq_q8_T{T}", float(n_fwd),
+            f"pallas_calls={n_fwd} (O(1) in T)")
+        row(f"quant/train_dispatch_fused_seq_q8_T{T}", float(n_train),
+            f"pallas_calls={n_train} (1 fwd + 1 bwd, O(1) in T)")
+        for mode in ("fwd", "bwd"):
+            f32 = seq_lib.choose_batch_block(
+                B, T, cfg.n_layers, p_width, cfg.hidden,
+                vmem_budget=STREAM_BUDGET, mode=mode)
+            q8 = seq_lib.choose_batch_block(
+                B, T, cfg.n_layers, p_width, cfg.hidden,
+                vmem_budget=STREAM_BUDGET, mode=mode, quantized=True)
+            parts = [f"f32_blocks={tuple(f32) if f32 else None}",
+                     f"q8_blocks={tuple(q8) if q8 else None}"]
+            if f32 is not None and q8 is not None:
+                cf = lstm_seq_stream_costs(
+                    T, cfg.n_layers, p_width, cfg.hidden, B, f32.block_b,
+                    f32.time_chunk, mode=mode)
+                cq = lstm_seq_stream_costs(
+                    T, cfg.n_layers, p_width, cfg.hidden, B, q8.block_b,
+                    q8.time_chunk, mode=mode, quantized=True)
+                parts.append(f"streamed_f32={cf['hbm_bytes']:.0f}B")
+                parts.append(f"streamed_q8={cq['hbm_bytes']:.0f}B"
+                             f"({cq['hbm_bytes'] / cf['hbm_bytes']:.2f}x)")
+                saved = float(cq["hbm_bytes"])
+            else:
+                saved = 0.0
+            row(f"quant/budget_{mode}_T{T}", saved, ",".join(parts))
+
+
+def bench_quant_smoke() -> None:
+    """CI smoke (fast job): the q8 acceptance criteria, executed.
+
+    Asserts (a) the quantization-aware table returns a strictly-no-finer
+    tiling than f32 at the mobile-class budget, (b) the q8 plan is 1 fwd /
+    2 train dispatches at a long T, (c) the executed kernels agree with the
+    dequantize oracle within fp rounding and with the f32 sequential plan
+    within the documented int8 error band, and (d) straight-through
+    training grads are finite.
+    """
+    import numpy as np
+
+    from repro.analysis import count_kernel_dispatches, count_train_dispatches
+    from repro.kernels import lstm_seq as seq_lib
+    from repro.kernels import ref
+    from repro.partitioning import split
+
+    cfg = MOBIRNN_LSTM
+    B, T = 2, 512
+    p_width = max(cfg.input_dim, cfg.hidden)
+    # no-finer-tiling acceptance across the fig2 T sweep, both modes
+    for T_chk in (32, 128, 512, 1024, 2048):
+        for mode in ("fwd", "bwd"):
+            f32 = seq_lib.choose_batch_block(
+                B, T_chk, cfg.n_layers, p_width, cfg.hidden,
+                vmem_budget=STREAM_BUDGET, mode=mode)
+            q8 = seq_lib.choose_batch_block(
+                B, T_chk, cfg.n_layers, p_width, cfg.hidden,
+                vmem_budget=STREAM_BUDGET, mode=mode, quantized=True)
+            assert q8 is not None, (T_chk, mode)
+            if f32 is not None:
+                assert q8.block_b >= f32.block_b, (T_chk, mode, f32, q8)
+                assert q8.time_chunk is None or (
+                    f32.time_chunk is not None
+                    and q8.time_chunk >= f32.time_chunk), (T_chk, mode,
+                                                          f32, q8)
+
+    params = lstm.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.input_dim))
+    labels = jnp.zeros((B,), jnp.int32)
+
+    def fwd(p, x, cfg):
+        return lstm.forward_fused_seq_q8(p, x, cfg,
+                                         vmem_budget=STREAM_BUDGET)
+
+    n_fwd = count_kernel_dispatches(jax.make_jaxpr(
+        lambda p, x: fwd(p, x, cfg))(params, x))
+    n_train = count_train_dispatches(
+        lambda p: lstm.loss_fn(p, x, labels, cfg, forward=fwd), params)
+    assert n_fwd == 1, f"q8 forward fell back: {n_fwd} dispatches"
+    assert n_train == 2, f"q8 backward fell back: {n_train} dispatches"
+
+    # executed kernels vs the dequantize oracle (fp-rounding band) ...
+    values, _ = split(params)
+    w_stack, b_stack, pw = seq_lib.stack_params(values["layers"], cfg.hidden)
+    xp = seq_lib.pad_input(x, pw)
+    wq, scales = ref.quantize_q8(w_stack)
+    want_c, want_h = ref.lstm_seq_q8(wq, scales, b_stack, xp)
+    got_c, got_h = seq_lib.lstm_seq_q8(w_stack, b_stack, xp)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                               rtol=1e-4, atol=1e-5)
+    # ... and the full plan vs the f32 sequential within the int8 band
+    want = lstm.forward_sequential(params, x, cfg)
+    got = fwd(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+    _, grads = jax.value_and_grad(
+        lambda p: lstm.loss_fn(p, x, labels, cfg, forward=fwd))(params)
+    assert all(bool(jnp.all(jnp.isfinite(g)))
+               for g in jax.tree.leaves(grads))
+    row("quant_smoke/long_T_q8", float(T),
+        f"fwd_dispatches={n_fwd},train_dispatches={n_train},"
+        f"budget={STREAM_BUDGET}")
+
+
 def bench_fig4_speedup() -> None:
     cfg = MOBIRNN_LSTM
     in_dim = cfg.input_dim + cfg.hidden
@@ -321,8 +456,8 @@ def bench_train_step() -> None:
         t = timeit(step, params, state, repeats=2)
         base = base or t
         note = f"speedup_vs_sequential={base / t:.2f}x"
-        if name == "fused_seq":
-            note += f",bwd_viable={viable('fused_seq')}"
+        if name in ("fused_seq", "fused_seq_q8"):
+            note += f",bwd_viable={viable(name)}"
         row(f"train/step_{name}_B{B}_T{T}", t, note)
 
 
@@ -333,6 +468,7 @@ def bench_fig7_load() -> None:
                                                   cfg.input_dim))
     accel = jax.jit(lambda p, x: lstm.forward_wavefront(p, x, cfg))
     accel_seq = jax.jit(lambda p, x: lstm.forward_fused_seq(p, x, cfg))
+    accel_seq_q8 = jax.jit(lambda p, x: lstm.forward_fused_seq_q8(p, x, cfg))
     cpu = jax.jit(lambda p, x: lstm.forward_sequential(p, x, cfg))
     sensor = SyntheticLoadSensor(0.0)
     # VMEM-model viability: never calibrate/choose the sequence-resident
@@ -340,11 +476,17 @@ def bench_fig7_load() -> None:
     # benchmark its fused_cell fallback under the wrong name).  This is the
     # INFERENCE dispatch bench, so the forward working set (train=False) is
     # the right gate; a train-time scheduler passes train=True to size the
-    # ~3x backward working set instead (see bench_train_step).
+    # ~3x backward working set instead (see bench_train_step).  The q8 plan
+    # is gated by the quantization-aware table (4x smaller weight term), so
+    # the per-tick choice keeps a fused option under budgets that filter
+    # the f32 plan out.
     sched = Scheduler(sensor, viable=lstm.plan_viability(
-        cfg, 1, cfg.seq_len, seq_plan_names=("accel_seq",), train=False))
+        cfg, 1, cfg.seq_len, seq_plan_names=("accel_seq",),
+        q8_plan_names=("accel_seq_q8",), train=False))
     sched.register(Plan("accel", accel, shared=True, sensitivity=1.0))
     sched.register(Plan("accel_seq", accel_seq, shared=True,
+                        sensitivity=1.0))
+    sched.register(Plan("accel_seq_q8", accel_seq_q8, shared=True,
                         sensitivity=1.0))
     sched.register(Plan("cpu", cpu, shared=False))
     sched.calibrate(params, x)
@@ -524,6 +666,17 @@ def main() -> None:
                          "fused plan does NOT fall back past the "
                          "whole-T-resident budget; the CI fast-job "
                          "invocation)")
+    ap.add_argument("--quant-smoke", action="store_true",
+                    help="run only the int8-plan smoke (asserts 1 fwd / 2 "
+                         "train dispatches for fused_seq_q8, oracle "
+                         "agreement within the int8 error band, and the "
+                         "no-finer q8 tiling at the mobile budget; the CI "
+                         "fast-job invocation)")
+    ap.add_argument("--fig2", action="store_true",
+                    help="run only the fig2 dispatch-count rows + the "
+                         "quant/* budget rows (the CI dispatch-regression "
+                         "guard input — see "
+                         "benchmarks/check_dispatch_regression.py)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as JSON (e.g. BENCH_PR4.json) "
                          "for cross-PR perf tracking")
@@ -536,10 +689,17 @@ def main() -> None:
         bench_train_step()
     elif args.stream_smoke:
         bench_stream_smoke()
+    elif args.quant_smoke:
+        bench_quant_smoke()
+    elif args.fig2:
+        bench_fig2_dispatch_counts()
+        bench_quant_rows()
     else:
         bench_fig2_dispatch_counts()
+        bench_quant_rows()
         bench_chunk_sweep()
         bench_stream_smoke()
+        bench_quant_smoke()
         bench_fig3_factorization()
         bench_fig4_speedup()
         bench_fig5_complexity()

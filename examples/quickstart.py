@@ -1,10 +1,12 @@
 """Quickstart: the paper's model end to end in ~60 lines.
 
-Builds MobiRNN's 2-layer x 32-hidden stacked LSTM, runs it under all FOUR
-execution plans (sequential, wavefront, per-cell fused Pallas kernel, and
-the sequence-resident Pallas kernel — one dispatch for the whole sequence),
-verifies they agree, trains it briefly on the synthetic HAR data, and shows
-the load-aware scheduler choosing a backend — the whole paper in miniature.
+Builds MobiRNN's 2-layer x 32-hidden stacked LSTM, runs it under the
+registered execution plans (sequential, wavefront, per-cell fused Pallas
+kernel, the sequence-resident Pallas kernel — one dispatch for the whole
+sequence — and its int8-weight variant), verifies they agree (the q8 plan
+within its int8 error band), trains it briefly on the synthetic HAR data,
+and shows the load-aware scheduler choosing a backend — the whole paper in
+miniature.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -27,15 +29,18 @@ def main() -> None:
     x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.seq_len,
                                                   cfg.input_dim))
 
-    # --- four execution plans, one result ---------------------------------
+    # --- five execution plans, one result ---------------------------------
     seq = lstm.forward_sequential(params, x, cfg)
     wave = lstm.forward_wavefront(params, x, cfg)
     fused = lstm.forward_fused_kernel(params, x[:, :16], cfg)
     fused_seq = lstm.forward_fused_seq(params, x, cfg)
+    fused_q8 = lstm.forward_fused_seq_q8(params, x, cfg)
     print("wavefront == sequential:",
           bool(jnp.allclose(seq, wave, atol=1e-4)))
     print("fused_seq == sequential:",
           bool(jnp.allclose(seq, fused_seq, atol=1e-4)))
+    print("fused_seq_q8 within int8 band:",
+          bool(jnp.allclose(seq, fused_q8, atol=5e-2)))
     print(f"wavefront width: {wavefront.wavefront_width(cfg.n_layers, 4)} "
           f"-> {wavefront.live_buffers(cfg.n_layers, 4)} preallocated "
           f"buffers (paper Fig 1: 6 instead of 24)")

@@ -2,8 +2,10 @@
 convergence (a few hundred steps) and reproduce the §4 evaluation protocol
 (latency over 100 test cases, per-plan).
 
-Training runs under any of the four registered execution plans
-(core/lstm.FORWARD_PLANS) via ``--plan`` — with ``fused_seq`` the whole
+Training runs under any of the registered execution plans
+(core/lstm.FORWARD_PLANS) via ``--plan`` — ``fused_seq_q8`` trains
+quantization-aware (int8 forward, straight-through grads to f32 masters);
+with either fused-seq plan the whole
 ``value_and_grad`` lowers to TWO Pallas dispatches (one trajectory-emitting
 forward + one reverse-sweep BPTT kernel), and the latency table sweeps ALL
 registered plans so the Fig 4 comparison covers the Pallas plans too.
@@ -34,9 +36,11 @@ def main() -> None:
     ap.add_argument("--plan", default="sequential",
                     choices=sorted(lstm.FORWARD_PLANS),
                     help="execution plan for the TRAINING step "
-                         "(core/lstm.FORWARD_PLANS; all are numerically "
-                         "equivalent — fused_seq is the single-dispatch "
-                         "MobiRNN fast path, forward and backward)")
+                         "(core/lstm.FORWARD_PLANS; fused_seq is the "
+                         "single-dispatch MobiRNN fast path, forward and "
+                         "backward; fused_seq_q8 is its int8-weight QAT "
+                         "variant — equivalent within the int8 error band, "
+                         "the rest exactly)")
     ap.add_argument("--latency-cases", type=int, default=100,
                     help="cases for the paper §4.1 latency protocol "
                          "(0 skips it — the CI smoke setting)")

@@ -84,7 +84,8 @@ def lstm_seq_stream_costs(seq_len: int, n_layers: int, p_width: int,
                           hidden: int, batch: int, block_b: int,
                           time_chunk: int | None, dtype_bytes: int = 4,
                           w_dtype_bytes: int | None = None,
-                          mode: str = "fwd") -> dict[str, float]:
+                          mode: str = "fwd",
+                          quantized: bool = False) -> dict[str, float]:
     """Roofline terms for ONE fused-LSTM dispatch under the streamed layout.
 
     The time-chunked kernels (kernels/lstm_seq.py / lstm_seq_bwd.py) trade
@@ -107,15 +108,27 @@ def lstm_seq_stream_costs(seq_len: int, n_layers: int, p_width: int,
     ``mode="fwd"`` sizes the inference forward; ``mode="bwd"`` sizes the
     reverse-sweep dispatch (its trajectory-emitting forward is strictly
     cheaper on both axes).
+
+    ``quantized=True`` sizes the int8-weight plan (``fused_seq_q8``): the
+    streamed weight stack is 1 byte/weight with the f32 scales + biases
+    riding along (~4x less weight traffic per batch tile), and the bwd
+    dw/db write-out is f32 (straight-through master-weight gradients).
     """
     from repro.kernels import lstm_seq as seq_lib
 
-    wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
+    w_count = n_layers * (p_width + hidden) * 4 * hidden
+    b_count = n_layers * 4 * hidden
+    if quantized:
+        wb = 1 if w_dtype_bytes is None else w_dtype_bytes
+        weight_bytes = w_count * wb + b_count * 4 * 2   # + f32 bias + scales
+        dw_bytes = (w_count + b_count) * 4              # f32 master grads
+    else:
+        wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
+        weight_bytes = (w_count + b_count) * wb
+        dw_bytes = weight_bytes
     n_tiles = math.ceil(batch / block_b)
     tc = seq_len if time_chunk is None else min(time_chunk, seq_len)
     nc = math.ceil(seq_len / tc)
-    weight_bytes = (n_layers * (p_width + hidden) * 4 * hidden
-                    + n_layers * 4 * hidden) * wb
     # streamed rows per batch tile: clamped tail windows re-read rows
     x_rows = nc * tc
     traj_rows = nc * (tc + 1 if nc > 1 else tc)
@@ -135,11 +148,12 @@ def lstm_seq_stream_costs(seq_len: int, n_layers: int, p_width: int,
         per_tile_flops = seq_len * n_layers * 3 * matmul
     hbm_bytes = n_tiles * per_tile_bytes
     if mode == "bwd":
-        hbm_bytes += weight_bytes                        # dw/db written once
+        hbm_bytes += dw_bytes                            # dw/db written once
     flops = n_tiles * per_tile_flops
     resident = seq_lib.working_set_bytes(
         seq_len, n_layers, p_width, hidden, block_b, dtype_bytes,
-        w_dtype_bytes, mode=mode, time_chunk=time_chunk)
+        w_dtype_bytes, mode=mode, time_chunk=time_chunk,
+        quantized=quantized)
     return {
         "flops": float(flops),
         "hbm_bytes": float(hbm_bytes),

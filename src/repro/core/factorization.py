@@ -92,10 +92,19 @@ DEFAULT_VMEM_BUDGET = 96 << 20   # leave headroom below the 128MB v5e VMEM
 #: Small enough that the seed config's whole-T-resident fused-LSTM working
 #: set falls off it by T=512 (bwd) / T=2048 (fwd), so it is the shared
 #: stress budget for the time-streaming pipeline: benchmarks/run.py
-#: (STREAM_BUDGET rows + --stream-smoke, the CI invocation) and the
-#: acceptance tests (test_plan_equivalence, test_scheduler_state) all
-#: reference THIS constant so they assert one viability surface.
+#: (STREAM_BUDGET rows + --stream-smoke / --quant-smoke, the CI
+#: invocations) and the acceptance tests (test_plan_equivalence,
+#: test_scheduler_state) all reference THIS constant so they assert one
+#: viability surface.  Against it the int8-weight plan (fused_seq_q8,
+#: Q8_WEIGHT_BYTES per weight instead of 4) keeps whole-T residency deeper
+#: into T and lowers the (bm=1, tc=1) viability floors — the widened
+#: decision table kernels/lstm_seq.choose_batch_block(quantized=True)
+#: searches and the quant_* benchmark rows record.
 MOBILE_VMEM_BUDGET = 320 << 10
+#: Bytes per weight of the int8-quantized fused-LSTM plan (per-output-
+#: channel symmetric int8, kernels/ref.quantize_q8) — the 4x lever on the
+#: budget table's dominant (L, P+H, 4H) weight term.
+Q8_WEIGHT_BYTES = 1
 
 
 def round_up(x: int, m: int) -> int:

@@ -1,7 +1,8 @@
 """The paper's model: stacked LSTM for activity recognition (MobiRNN §4.1).
 
-FOUR execution plans over the same parameters (all numerically equivalent,
-asserted by tests/test_plan_equivalence.py), and when the scheduler
+FIVE execution plans over the same parameters (the first four numerically
+equivalent, asserted by tests/test_plan_equivalence.py; the fifth equivalent
+within a documented int8 error band), and when the scheduler
 (core/scheduler.py) should prefer each:
 
 * ``forward_sequential`` — reference plan: scan over time, layers unrolled
@@ -21,8 +22,16 @@ asserted by tests/test_plan_equivalence.py), and when the scheduler
   in DISPATCH-BOUND regimes (small/medium models, long sequences) — the
   MobiRNN fast path.  Falls back to ``forward_fused_kernel`` when the
   stacked weights exceed the VMEM budget (core/factorization).
+* ``forward_fused_seq_q8`` — the sequence-resident plan with per-output-
+  channel symmetric INT8 weights (f32 scales + biases), dequantized on the
+  fly inside the fused kernels.  Quarters the dominant VMEM term and the
+  streamed weight traffic, so it stays whole-T-resident (and viable at all)
+  deeper into the ``(T, budget)`` surface than ``fused_seq`` — the
+  RTMobile/Grachev compression lever applied to the MobiRNN fast path.
+  Matches the dequantize oracle (kernels/ref.lstm_seq_q8) within fp
+  rounding and the f32 plans within the int8 error band.
 
-All four are real TRAINING choices too: under ``jax.grad`` the fused plans
+All five are real TRAINING choices too: under ``jax.grad`` the fused plans
 carry custom VJPs — ``fused_seq`` runs ONE reverse-sweep BPTT kernel
 (kernels/lstm_seq_bwd.py; 2 dispatches per value_and_grad, O(1) in T) with
 an oracle-VJP fallback gated by ``choose_batch_block(mode="bwd")``;
@@ -138,35 +147,77 @@ def forward_fused_seq(params: dict, x: jax.Array, cfg: LSTMConfig,
     budget) does this route to ``forward_fused_kernel``, whose per-cell
     kernel tiles the hidden dimension through HBM instead.
     """
+    return _forward_fused_seq_impl(params, x, cfg, interpret=interpret,
+                                   vmem_budget=vmem_budget, quantized=False)
+
+
+def _forward_fused_seq_impl(params: dict, x: jax.Array, cfg: LSTMConfig, *,
+                            interpret: bool, vmem_budget: int | None,
+                            quantized: bool) -> jax.Array:
+    """Shared body of the f32 and int8 sequence-resident plans: stack the
+    layer params, consult the (quantization-aware) ``(block_b, time_chunk)``
+    table for the fwd and bwd dispatches, fall back to the per-cell kernel
+    when even (bm=1, tc=1) cannot fit, run the fused kernel, apply the
+    head.  ``quantized`` flips the budget surface, casts the stack to f32
+    masters (so int8 rounding is the ONLY deviation and straight-through
+    grads land in f32 before the astype VJP returns them to param dtype),
+    and dispatches the q8 kernel."""
     from repro.kernels import lstm_seq as seq_lib
     from repro.kernels import ops as kernel_ops
 
     p = _plain_params(params)
     w_stack, b_stack, p_width = seq_lib.stack_params(p["layers"], cfg.hidden)
+    if quantized:
+        w_stack = w_stack.astype(jnp.float32)
+        b_stack = b_stack.astype(jnp.float32)
+        w_bytes = None                  # 1 byte/weight via quantized=True
+    else:
+        w_bytes = jnp.dtype(w_stack.dtype).itemsize
     B, T, _ = x.shape
     dtype_bytes = jnp.dtype(x.dtype).itemsize
-    w_bytes = jnp.dtype(w_stack.dtype).itemsize
     blocks = seq_lib.choose_batch_block(
         B, T, cfg.n_layers, p_width, cfg.hidden,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
-        w_dtype_bytes=w_bytes)
+        w_dtype_bytes=w_bytes, quantized=quantized)
     if blocks is None:    # weight stack > VMEM even at (bm=1, tc=1)
         return forward_fused_kernel(params, x, cfg, interpret=interpret)
     bwd_blocks = seq_lib.choose_batch_block(
         B, T, cfg.n_layers, p_width, cfg.hidden,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
-        w_dtype_bytes=w_bytes, mode="bwd")
+        w_dtype_bytes=w_bytes, mode="bwd", quantized=quantized)
     xp = seq_lib.pad_input(x, p_width)
     if bwd_blocks is None:
         bwd_kw = dict(bwd_block_b=seq_lib.ORACLE_BWD)
     else:
         bwd_kw = dict(bwd_block_b=bwd_blocks.block_b,
                       bwd_time_chunk=bwd_blocks.time_chunk)
-    _, h = kernel_ops.lstm_seq(w_stack, b_stack, xp,
-                               block_b=blocks.block_b,
-                               time_chunk=blocks.time_chunk,
-                               interpret=interpret, **bwd_kw)
+    op = kernel_ops.lstm_seq_q8 if quantized else kernel_ops.lstm_seq
+    _, h = op(w_stack, b_stack, xp, block_b=blocks.block_b,
+              time_chunk=blocks.time_chunk, interpret=interpret, **bwd_kw)
     return h[-1] @ p["head"]["w"] + p["head"]["b"]
+
+
+def forward_fused_seq_q8(params: dict, x: jax.Array, cfg: LSTMConfig,
+                         interpret: bool = True,
+                         vmem_budget: int | None = None) -> jax.Array:
+    """Int8-weight sequence-resident plan: the ``fused_seq`` fast path with
+    the stacked weights quantized to per-output-channel symmetric int8
+    (kernels/ref.quantize_q8) and dequantized on the fly inside the fused
+    kernels.  The dominant VMEM term — the (L, P+H, 4H) weight stack —
+    shrinks 4x, so ``choose_batch_block(quantized=True)`` keeps whole-T
+    residency deeper into T and coarser batch tiles at budgets where the
+    f32 plan must stream or fall back, and the streamed-HBM roofline sees
+    ~4x less weight traffic (analysis.lstm_seq_stream_costs).
+
+    NOT numerically equivalent to the other plans: it matches the
+    dequantize oracle within fp rounding, and the f32 plans within the
+    documented int8 error band (tests/test_plan_equivalence.py).  Under
+    ``jax.grad`` the straight-through q8 reverse sweep keeps
+    ``value_and_grad`` at exactly 2 dispatches; masters stay f32, so the
+    plan is a drop-in quantization-aware-training choice.
+    """
+    return _forward_fused_seq_impl(params, x, cfg, interpret=interpret,
+                                   vmem_budget=vmem_budget, quantized=True)
 
 
 def forward_wavefront(params: dict, x: jax.Array, cfg: LSTMConfig
@@ -176,19 +227,24 @@ def forward_wavefront(params: dict, x: jax.Array, cfg: LSTMConfig
     return wavefront.forward_wavefront(params, x, cfg)
 
 
-#: All four execution plans, keyed by scheduler Plan name — the registration
+#: All five execution plans, keyed by scheduler Plan name — the registration
 #: table used by benchmarks/run.py, examples/quickstart.py, and the
-#: equivalence tests.  Every entry maps (params, x, cfg) -> logits.
+#: equivalence tests.  Every entry maps (params, x, cfg) -> logits.  The
+#: first four are numerically equivalent; ``fused_seq_q8`` is the
+#: int8-weight variant of ``fused_seq`` and matches the others only within
+#: the documented int8 error band (see its docstring).
 FORWARD_PLANS: dict[str, Callable] = {
     "sequential": forward_sequential,
     "wavefront": forward_wavefront,
     "fused_cell": forward_fused_kernel,
     "fused_seq": forward_fused_seq,
+    "fused_seq_q8": forward_fused_seq_q8,
 }
 
 
 def plan_viability(cfg: LSTMConfig, batch: int, seq_len: int, *,
                    seq_plan_names: tuple[str, ...] = ("fused_seq",),
+                   q8_plan_names: tuple[str, ...] = ("fused_seq_q8",),
                    dtype_bytes: int = 4, w_dtype_bytes: int | None = None,
                    vmem_budget: int | None = None,
                    train: bool = False) -> Callable[[str], bool]:
@@ -213,16 +269,30 @@ def plan_viability(cfg: LSTMConfig, batch: int, seq_len: int, *,
     pick ``fused_seq`` for a training step whose backward residuals blow
     the VMEM budget and silently drops to the oracle VJP, i.e. the slow
     path under the fast plan's name.
+
+    ``q8_plan_names`` lists the scheduler names of the INT8-weight
+    sequence-resident plan (``fused_seq_q8``); its viability surface is the
+    quantization-aware table (``choose_batch_block(quantized=True)``: 1-byte
+    weight stack + f32 scales; f32 dw/db outs under ``train=True``) — a
+    strictly-no-smaller window than the f32 plan's, so there are budgets
+    where the scheduler may only offer the quantized fast path.
     """
     from repro.kernels import lstm_seq as seq_lib
 
     p_width = max(cfg.input_dim, cfg.hidden)
+    mode = "bwd" if train else "fwd"
     block = seq_lib.choose_batch_block(
         batch, seq_len, cfg.n_layers, p_width, cfg.hidden,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
-        w_dtype_bytes=w_dtype_bytes, mode="bwd" if train else "fwd")
+        w_dtype_bytes=w_dtype_bytes, mode=mode)
+    q8_block = seq_lib.choose_batch_block(
+        batch, seq_len, cfg.n_layers, p_width, cfg.hidden,
+        dtype_bytes=dtype_bytes, vmem_budget=vmem_budget, mode=mode,
+        quantized=True)
 
     def viable(plan_name: str) -> bool:
+        if plan_name in q8_plan_names:
+            return q8_block is not None
         return block is not None or plan_name not in seq_plan_names
 
     return viable

@@ -9,7 +9,7 @@ current load; ``Scheduler.choose`` picks the predicted-fastest plan and
 ``Scheduler.record`` folds observed latencies back into the calibration
 (exponential moving average), so the crossover point is learned, not assumed.
 
-The four LSTM execution plans it schedules (core/lstm.FORWARD_PLANS; see
+The five LSTM execution plans it schedules (core/lstm.FORWARD_PLANS; see
 that module's docstring for the full decision table):
 
 * ``sequential`` / ``wavefront`` — XLA plans; the CPU-ish and
@@ -25,6 +25,15 @@ that module's docstring for the full decision table):
   ``(bm=1, tc=1)`` routes to ``fused_cell`` (wire the table in via
   ``Scheduler(viable=core/lstm.plan_viability(...))``, with
   ``train=True`` for training-step schedulers).
+* ``fused_seq_q8`` — the sequence-resident plan over int8-quantized
+  weights.  Same dispatch profile as ``fused_seq`` but its viability
+  surface is the QUANTIZATION-AWARE budget table
+  (``choose_batch_block(quantized=True)``: 1-byte weight stack + f32
+  scales), so under tight VMEM it stays schedulable — whole-T resident,
+  coarse-tiled — where the f32 plan must stream or drops out entirely;
+  ``plan_viability`` sizes both surfaces so the per-tick Fig 7 choice sees
+  the 4x smaller weight term.  Accuracy contract: int8 error band, not
+  bit-equality — register it only where that band is acceptable.
 """
 from __future__ import annotations
 

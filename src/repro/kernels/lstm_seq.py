@@ -128,7 +128,8 @@ def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
                       block_b: int, dtype_bytes: int = 4,
                       w_dtype_bytes: int | None = None,
                       mode: str = "fwd",
-                      time_chunk: int | None = None) -> int:
+                      time_chunk: int | None = None,
+                      quantized: bool = False) -> int:
     """Kernel working set for one grid step, per phase.
 
     ``mode="fwd"`` sizes the inference forward: stacked weights + the batch
@@ -153,12 +154,32 @@ def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
 
     ``dtype_bytes`` sizes activations/outputs; ``w_dtype_bytes`` sizes the
     weight stack (defaults to ``dtype_bytes`` — pass it explicitly under
-    mixed precision, e.g. bf16 activations over f32 parameters)."""
+    mixed precision, e.g. bf16 activations over f32 parameters).
+
+    ``quantized=True`` sizes the int8-weight plan (``fused_seq_q8``): the
+    weight stack is 1 byte/weight (unless ``w_dtype_bytes`` overrides), the
+    f32 per-channel scales ride along with the f32 biases, PLUS one
+    f32 (P+H, 4H) slab for the active layer's on-the-fly dequantized block
+    (``_step_layers``/``_unwind_step`` cast ``w_ref[layer]`` to f32 before
+    the matmuls — a live weight-layer-sized temporary the int8 residency
+    saving must pay for), and in ``bwd`` the dw/db OUTPUTS are f32
+    (straight-through gradients land on the f32 master weights, never on
+    the int8 stack) — the f32 dw/db accumulator scratch is unchanged
+    either way."""
     if mode not in ("fwd", "bwd"):
         raise ValueError(f"mode must be 'fwd' or 'bwd', got {mode!r}")
-    wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
-    weights = n_layers * (p_width + hidden) * 4 * hidden * wb
-    biases = n_layers * 4 * hidden * wb
+    if quantized:
+        wb = 1 if w_dtype_bytes is None else w_dtype_bytes
+    else:
+        wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
+    w_count = n_layers * (p_width + hidden) * 4 * hidden
+    b_count = n_layers * 4 * hidden
+    weights = w_count * wb
+    if quantized:
+        biases = b_count * 4 * 2        # f32 bias + f32 per-channel scales
+        weights += (p_width + hidden) * 4 * hidden * 4   # dequant temporary
+    else:
+        biases = b_count * wb
     if time_chunk is None:
         x_rows = seq_len                                 # whole T resident
     else:
@@ -174,8 +195,11 @@ def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
             tc = min(time_chunk, seq_len)
             tw = tc + 1 if seq_len > tc else tc          # + the t-1 row
             traj = 2 * 2 * tw * n_layers * block_b * hidden * 4  # 2 slots
-        dw_scratch = weights // wb * 4 + biases // wb * 4      # f32 accum
-        dw_out = weights + biases                              # param dtype
+        dw_scratch = (w_count + b_count) * 4                   # f32 accum
+        if quantized:
+            dw_out = (w_count + b_count) * 4     # f32 master-weight grads
+        else:
+            dw_out = weights + biases                          # param dtype
         dx_block = x_block                           # dx mirrors x residency
         # (dc, dh) carries reuse `state`; the final-state cotangent blocks:
         cots = 2 * n_layers * block_b * hidden * dtype_bytes
@@ -188,7 +212,8 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
                        vmem_budget: int | None = None,
                        w_dtype_bytes: int | None = None,
                        mode: str = "fwd",
-                       allow_chunk: bool = True) -> SeqBlocks | None:
+                       allow_chunk: bool = True,
+                       quantized: bool = False) -> SeqBlocks | None:
     """Pick the (batch tile, time residency), or None when not viable.
 
     Seeds the batch tile from factorization.choose_block on the per-step
@@ -216,7 +241,11 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
     Callers then route to the per-cell kernel (fwd) or the oracle VJP
     (bwd).  ``allow_chunk=False`` restores the pre-streaming decision
     surface (whole-T residency or bust) — used by benchmarks to show the
-    cliff the pipeline removes.
+    cliff the pipeline removes.  ``quantized=True`` sizes the int8-weight
+    plan (1 byte/weight + f32 scales, f32 dw/db outs in bwd — see
+    ``working_set_bytes``): with the dominant weight term quartered, the
+    same coarseness search admits whole-T residency deeper into T and
+    coarser tiles at budgets where f32 weights force streaming or fail.
     """
     budget = factorization.DEFAULT_VMEM_BUDGET if vmem_budget is None \
         else vmem_budget
@@ -224,7 +253,7 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
     def fits(bm: int, tc: int | None) -> bool:
         return working_set_bytes(seq_len, n_layers, p_width, hidden, bm,
                                  dtype_bytes, w_dtype_bytes, mode=mode,
-                                 time_chunk=tc) <= budget
+                                 time_chunk=tc, quantized=quantized) <= budget
 
     bm, _, _ = factorization.choose_block(
         batch, 4 * hidden, p_width + hidden, bytes_per_elem=dtype_bytes,
@@ -251,15 +280,27 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
 # Kernel
 # ---------------------------------------------------------------------------
 def _step_layers(inp, w_ref, b_ref, c_scr, h_scr, *, n_layers: int,
-                 p_width: int) -> None:
+                 p_width: int, s_ref=None) -> None:
     """Advance all L layers one timestep, updating (c, h) scratch in place.
 
     ``inp``: (bm, P) f32 — this step's (padded) input.  Shared by the plain,
     trajectory-emitting, and backward-recompute kernel bodies so the three
     dispatches stay bit-identical in their forward math.
+
+    ``s_ref`` (optional): (L, 4H) f32 per-output-channel scales — the int8
+    path (``fused_seq_q8``).  The weights then live in VMEM as int8 and are
+    dequantized ON THE FLY: cast to f32 for the gate matmuls and the
+    per-channel scale folded into the pre-activations afterwards
+    ((x @ wq) * s == x @ (wq * s) — exact in reals, an fp-rounding error
+    band vs the dequantize oracle).  The dequantized block is a per-layer
+    f32 temporary — one (P+H, 4H) slab at a time, which
+    ``working_set_bytes(quantized=True)`` counts on top of the resident
+    1-byte stack.
     """
     for layer in range(n_layers):                        # static unroll
         w = w_ref[layer]                                 # (P+H, 4H)
+        if s_ref is not None:
+            w = w.astype(F32)                            # int8 -> f32
         # one coarse MXU work unit per layer: all four gates at once,
         # split as x-part + h-part to skip an in-loop concatenate
         gates = (
@@ -268,8 +309,10 @@ def _step_layers(inp, w_ref, b_ref, c_scr, h_scr, *, n_layers: int,
                                 preferred_element_type=F32)
             + jax.lax.dot_general(h_scr[layer], w[p_width:],
                                   (((1,), (0,)), ((), ())),
-                                  preferred_element_type=F32)
-            + b_ref[layer].astype(F32))
+                                  preferred_element_type=F32))
+        if s_ref is not None:
+            gates = gates * s_ref[layer].astype(F32)     # fold channel scale
+        gates = gates + b_ref[layer].astype(F32)
         i, f, g, o = jnp.split(gates, 4, axis=-1)
         c_new = (jax.nn.sigmoid(f) * c_scr[layer]
                  + jax.nn.sigmoid(i) * jnp.tanh(g))
@@ -282,12 +325,13 @@ def _step_layers(inp, w_ref, b_ref, c_scr, h_scr, *, n_layers: int,
 
 
 def _seq_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, c_scr, h_scr,
-                *, n_layers: int, seq_len: int, p_width: int):
+                *, n_layers: int, seq_len: int, p_width: int, s_ref=None):
     """One batch tile runs the whole (T x L) recurrence from VMEM.
 
     x_ref: (T, bm, P) time-major input tile; w_ref: (L, P+H, 4H);
     b_ref: (L, 4H); c_scr/h_scr: (L, bm, H) f32 VMEM scratch that IS the
     paper's preallocated state — written every step, never leaving VMEM.
+    ``s_ref``: (L, 4H) f32 per-channel scales when w_ref is int8 (q8 plan).
     """
     c_scr[...] = jnp.zeros_like(c_scr)
     h_scr[...] = jnp.zeros_like(h_scr)
@@ -295,7 +339,7 @@ def _seq_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, c_scr, h_scr,
     def step(t, carry):
         inp = x_ref[pl.ds(t, 1)][0].astype(F32)          # (bm, P)
         _step_layers(inp, w_ref, b_ref, c_scr, h_scr, n_layers=n_layers,
-                     p_width=p_width)
+                     p_width=p_width, s_ref=s_ref)
         return carry
 
     jax.lax.fori_loop(0, seq_len, step, 0)
@@ -303,9 +347,19 @@ def _seq_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, c_scr, h_scr,
     h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
 
 
+def _seq_q8_kernel(x_ref, w_ref, s_ref, b_ref, c_out_ref, h_out_ref, c_scr,
+                   h_scr, *, n_layers: int, seq_len: int, p_width: int):
+    """Int8-weight forward: the same body with the (L, 4H) f32 scales as an
+    extra input ref and the weight stack VMEM-resident as int8 (4x smaller
+    than the f32 plan's dominant term)."""
+    _seq_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, c_scr, h_scr,
+                n_layers=n_layers, seq_len=seq_len, p_width=p_width,
+                s_ref=s_ref)
+
+
 def _seq_traj_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, ct_ref,
                      ht_ref, c_scr, h_scr, *, n_layers: int, seq_len: int,
-                     p_width: int):
+                     p_width: int, s_ref=None):
     """Forward with residuals: same recurrence, but every step also writes
     the post-step (c, h) into the (T, L, bm, H) f32 trajectory outputs —
     the residual contract the reverse-sweep kernel (lstm_seq_bwd) consumes.
@@ -317,7 +371,7 @@ def _seq_traj_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, ct_ref,
     def step(t, carry):
         inp = x_ref[pl.ds(t, 1)][0].astype(F32)          # (bm, P)
         _step_layers(inp, w_ref, b_ref, c_scr, h_scr, n_layers=n_layers,
-                     p_width=p_width)
+                     p_width=p_width, s_ref=s_ref)
         ct_ref[pl.ds(t, 1)] = c_scr[...][None]
         ht_ref[pl.ds(t, 1)] = h_scr[...][None]
         return carry
@@ -325,6 +379,15 @@ def _seq_traj_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, ct_ref,
     jax.lax.fori_loop(0, seq_len, step, 0)
     c_out_ref[...] = c_scr[...].astype(c_out_ref.dtype)
     h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
+
+
+def _seq_traj_q8_kernel(x_ref, w_ref, s_ref, b_ref, c_out_ref, h_out_ref,
+                        ct_ref, ht_ref, c_scr, h_scr, *, n_layers: int,
+                        seq_len: int, p_width: int):
+    """Int8-weight trajectory-emitting forward (q8 training-path fwd)."""
+    _seq_traj_kernel(x_ref, w_ref, b_ref, c_out_ref, h_out_ref, ct_ref,
+                     ht_ref, c_scr, h_scr, n_layers=n_layers,
+                     seq_len=seq_len, p_width=p_width, s_ref=s_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -352,7 +415,7 @@ def _x_chunk_dma(x_hbm, xbuf, xsem, slot, k, *, tc: int, seq_len: int,
 def _seq_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
                         xbuf, c_scr, h_scr, xsem,
                         *, n_layers: int, seq_len: int, p_width: int,
-                        tc: int, nc: int):
+                        tc: int, nc: int, s_ref=None):
     """Forward with O(tc) input residency: same recurrence as ``_seq_kernel``
     but the (T, bm, P) block never materialises — chunk k+1 prefetches while
     chunk k computes.  x_hbm: (T, Bp, P) in HBM (batch padded to the tile
@@ -386,7 +449,8 @@ def _seq_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
             def _advance():
                 inp = xbuf[slot, t - src].astype(F32)    # (bm, P)
                 _step_layers(inp, w_ref, b_ref, c_scr, h_scr,
-                             n_layers=n_layers, p_width=p_width)
+                             n_layers=n_layers, p_width=p_width,
+                             s_ref=s_ref)
             return c2
 
         jax.lax.fori_loop(0, tc, step, 0)
@@ -397,12 +461,23 @@ def _seq_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
     h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
 
 
+def _seq_chunked_q8_kernel(x_hbm, w_ref, s_ref, b_ref, c_out_ref, h_out_ref,
+                           xbuf, c_scr, h_scr, xsem,
+                           *, n_layers: int, seq_len: int, p_width: int,
+                           tc: int, nc: int):
+    """Int8-weight streamed forward (scales ride with the resident stack)."""
+    _seq_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
+                        xbuf, c_scr, h_scr, xsem, n_layers=n_layers,
+                        seq_len=seq_len, p_width=p_width, tc=tc, nc=nc,
+                        s_ref=s_ref)
+
+
 def _seq_traj_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
                              ct_hbm, ht_hbm,
                              xbuf, ctb, htb, c_scr, h_scr,
                              xsem, csem, hsem,
                              *, n_layers: int, seq_len: int, p_width: int,
-                             tc: int, nc: int):
+                             tc: int, nc: int, s_ref=None):
     """Trajectory-emitting forward with O(tc) residency on BOTH sides: input
     chunks stream in, (tc, L, bm, H) trajectory chunks stream out through
     two staging buffers each.  ct_hbm/ht_hbm are (nc*tc, L, Bp, H) in HBM —
@@ -451,7 +526,8 @@ def _seq_traj_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
             def _advance():
                 inp = xbuf[slot, t - src].astype(F32)    # (bm, P)
                 _step_layers(inp, w_ref, b_ref, c_scr, h_scr,
-                             n_layers=n_layers, p_width=p_width)
+                             n_layers=n_layers, p_width=p_width,
+                             s_ref=s_ref)
                 ctb[slot, i] = c_scr[...]
                 htb[slot, i] = h_scr[...]
             return c2
@@ -475,6 +551,20 @@ def _seq_traj_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
     h_out_ref[...] = h_scr[...].astype(h_out_ref.dtype)
 
 
+def _seq_traj_chunked_q8_kernel(x_hbm, w_ref, s_ref, b_ref, c_out_ref,
+                                h_out_ref, ct_hbm, ht_hbm,
+                                xbuf, ctb, htb, c_scr, h_scr,
+                                xsem, csem, hsem,
+                                *, n_layers: int, seq_len: int, p_width: int,
+                                tc: int, nc: int):
+    """Int8-weight streamed trajectory-emitting forward."""
+    _seq_traj_chunked_kernel(x_hbm, w_ref, b_ref, c_out_ref, h_out_ref,
+                             ct_hbm, ht_hbm, xbuf, ctb, htb, c_scr, h_scr,
+                             xsem, csem, hsem, n_layers=n_layers,
+                             seq_len=seq_len, p_width=p_width, tc=tc, nc=nc,
+                             s_ref=s_ref)
+
+
 def _pad_batch(a: jax.Array, axis: int, padded: int) -> jax.Array:
     """Zero-pad ``axis`` of ``a`` to length ``padded`` (manual-DMA kernels
     address batch tiles themselves, so the tile grid must divide exactly —
@@ -489,7 +579,8 @@ def _pad_batch(a: jax.Array, axis: int, padded: int) -> jax.Array:
 @functools.partial(jax.jit,
                    static_argnames=("block_b", "time_chunk", "interpret"))
 def _lstm_seq_call(w: jax.Array, b: jax.Array, x: jax.Array,
-                   block_b: int, time_chunk: int | None, interpret: bool
+                   block_b: int, time_chunk: int | None, interpret: bool,
+                   scales: jax.Array | None = None
                    ) -> tuple[jax.Array, jax.Array]:
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H
@@ -498,16 +589,24 @@ def _lstm_seq_call(w: jax.Array, b: jax.Array, x: jax.Array,
     xt = jnp.swapaxes(x, 0, 1)                           # (T, B, P)
     if time_chunk is not None:
         return _lstm_seq_chunked_call(w, b, xt, bm, min(time_chunk, T),
-                                      interpret)
+                                      interpret, scales=scales)
     out = jax.ShapeDtypeStruct((L, B, H), x.dtype)
-    kernel = functools.partial(_seq_kernel, n_layers=L, seq_len=T,
-                               p_width=P)
+    if scales is None:
+        kernel = functools.partial(_seq_kernel, n_layers=L, seq_len=T,
+                                   p_width=P)
+        s_in, s_spec = (), ()
+    else:
+        kernel = functools.partial(_seq_q8_kernel, n_layers=L, seq_len=T,
+                                   p_width=P)
+        s_in = (scales,)
+        s_spec = (pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),)
     return pl.pallas_call(
         kernel,
         grid=(pl.cdiv(B, bm),),
         in_specs=[
             pl.BlockSpec((T, bm, P), lambda ib: (0, ib, 0)),
             pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            *s_spec,
             pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
         ],
         out_specs=[
@@ -520,11 +619,11 @@ def _lstm_seq_call(w: jax.Array, b: jax.Array, x: jax.Array,
             pltpu.VMEM((L, bm, H), F32),
         ],
         interpret=interpret,
-    )(xt, w, b)
+    )(xt, w, *s_in, b)
 
 
-def _lstm_seq_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
-                           ) -> tuple[jax.Array, jax.Array]:
+def _lstm_seq_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool,
+                           scales=None) -> tuple[jax.Array, jax.Array]:
     """Streamed forward: x lives in HBM, VMEM holds O(tc) of it."""
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H
@@ -534,14 +633,22 @@ def _lstm_seq_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
     nc = pl.cdiv(T, tc)
     xt = _pad_batch(xt, 1, Bp)
     out = jax.ShapeDtypeStruct((L, Bp, H), xt.dtype)
-    kernel = functools.partial(_seq_chunked_kernel, n_layers=L, seq_len=T,
-                               p_width=P, tc=tc, nc=nc)
+    if scales is None:
+        kernel = functools.partial(_seq_chunked_kernel, n_layers=L,
+                                   seq_len=T, p_width=P, tc=tc, nc=nc)
+        s_in, s_spec = (), ()
+    else:
+        kernel = functools.partial(_seq_chunked_q8_kernel, n_layers=L,
+                                   seq_len=T, p_width=P, tc=tc, nc=nc)
+        s_in = (scales,)
+        s_spec = (pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),)
     c, h = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),        # x streams manually
             pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            *s_spec,
             pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
         ],
         out_specs=[
@@ -556,7 +663,7 @@ def _lstm_seq_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
             pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
-    )(xt, w, b)
+    )(xt, w, *s_in, b)
     return c[:, :B], h[:, :B]
 
 
@@ -564,7 +671,8 @@ def _lstm_seq_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
                    static_argnames=("block_b", "time_chunk", "interpret"))
 def _lstm_seq_traj_call(w: jax.Array, b: jax.Array, x: jax.Array,
                         block_b: int, interpret: bool,
-                        time_chunk: int | None = None
+                        time_chunk: int | None = None,
+                        scales: jax.Array | None = None
                         ) -> tuple[jax.Array, jax.Array, jax.Array,
                                    jax.Array]:
     """Trajectory-emitting forward: (c, h, c_traj, h_traj), still ONE
@@ -578,17 +686,25 @@ def _lstm_seq_traj_call(w: jax.Array, b: jax.Array, x: jax.Array,
     xt = jnp.swapaxes(x, 0, 1)                           # (T, B, P)
     if time_chunk is not None:
         return _lstm_seq_traj_chunked_call(w, b, xt, bm, min(time_chunk, T),
-                                           interpret)
+                                           interpret, scales=scales)
     out = jax.ShapeDtypeStruct((L, B, H), x.dtype)
     traj = jax.ShapeDtypeStruct((T, L, B, H), F32)
-    kernel = functools.partial(_seq_traj_kernel, n_layers=L, seq_len=T,
-                               p_width=P)
+    if scales is None:
+        kernel = functools.partial(_seq_traj_kernel, n_layers=L, seq_len=T,
+                                   p_width=P)
+        s_in, s_spec = (), ()
+    else:
+        kernel = functools.partial(_seq_traj_q8_kernel, n_layers=L,
+                                   seq_len=T, p_width=P)
+        s_in = (scales,)
+        s_spec = (pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),)
     return pl.pallas_call(
         kernel,
         grid=(pl.cdiv(B, bm),),
         in_specs=[
             pl.BlockSpec((T, bm, P), lambda ib: (0, ib, 0)),
             pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            *s_spec,
             pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
         ],
         out_specs=[
@@ -603,10 +719,11 @@ def _lstm_seq_traj_call(w: jax.Array, b: jax.Array, x: jax.Array,
             pltpu.VMEM((L, bm, H), F32),
         ],
         interpret=interpret,
-    )(xt, w, b)
+    )(xt, w, *s_in, b)
 
 
-def _lstm_seq_traj_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
+def _lstm_seq_traj_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool,
+                                scales=None
                                 ) -> tuple[jax.Array, jax.Array, jax.Array,
                                            jax.Array]:
     """Streamed trajectory forward: O(tc) VMEM for input AND residuals."""
@@ -620,14 +737,22 @@ def _lstm_seq_traj_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
     xt = _pad_batch(xt, 1, Bp)
     out = jax.ShapeDtypeStruct((L, Bp, H), xt.dtype)
     traj = jax.ShapeDtypeStruct((Tp, L, Bp, H), F32)
-    kernel = functools.partial(_seq_traj_chunked_kernel, n_layers=L,
-                               seq_len=T, p_width=P, tc=tc, nc=nc)
+    if scales is None:
+        kernel = functools.partial(_seq_traj_chunked_kernel, n_layers=L,
+                                   seq_len=T, p_width=P, tc=tc, nc=nc)
+        s_in, s_spec = (), ()
+    else:
+        kernel = functools.partial(_seq_traj_chunked_q8_kernel, n_layers=L,
+                                   seq_len=T, p_width=P, tc=tc, nc=nc)
+        s_in = (scales,)
+        s_spec = (pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),)
     c, h, ct, ht = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),        # x streams manually
             pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            *s_spec,
             pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
         ],
         out_specs=[
@@ -648,7 +773,7 @@ def _lstm_seq_traj_chunked_call(w, b, xt, bm: int, tc: int, interpret: bool
             pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
-    )(xt, w, b)
+    )(xt, w, *s_in, b)
     return c[:, :B], h[:, :B], ct[:T, :, :B], ht[:T, :, :B]
 
 
@@ -691,6 +816,131 @@ def _lstm_seq_bwd(fwd_spec, bwd_spec, interpret, residuals, cotangents):
 _lstm_seq.defvjp(_lstm_seq_fwd, _lstm_seq_bwd)
 
 
+# ---------------------------------------------------------------------------
+# Int8-weight differentiable entry point (the `fused_seq_q8` plan).
+#
+# The primal takes the f32 MASTER weight stack; quantization (per-output-
+# channel symmetric int8, kernels/ref.quantize_q8) happens inside the traced
+# function with plain jnp ops — no extra kernel dispatch — so `value_and_grad`
+# stays at exactly 2 pallas_calls (trajectory-emitting q8 forward + q8
+# reverse sweep).  Gradients are STRAIGHT-THROUGH: the backward differentiates
+# the forward the kernel actually ran (dequantized int8 weights) and hands dw
+# to the master stack unchanged (d wdq / d w = identity), with the f32 dw/db
+# accumulators of the sweep untouched by the weight dtype.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _lstm_seq_q8(w, b, x, fwd_spec, bwd_spec, interpret):
+    from repro.kernels import ref
+    wq, s = ref.quantize_q8(w)
+    return _lstm_seq_call(wq, b, x, fwd_spec[0], fwd_spec[1], interpret,
+                          scales=s)
+
+
+def _lstm_seq_q8_fwd(w, b, x, fwd_spec, bwd_spec, interpret):
+    from repro.kernels import ref
+    wq, s = ref.quantize_q8(w)
+    if bwd_spec == ORACLE_BWD:
+        # backward working set does not fit VMEM: plain q8 forward, oracle
+        # VJP over the dequantized weights (straight-through to the master)
+        out = _lstm_seq_call(wq, b, x, fwd_spec[0], fwd_spec[1], interpret,
+                             scales=s)
+        return out, (wq, s, b, x)
+    c, h, ct, ht = _lstm_seq_traj_call(wq, b, x, bwd_spec[0], interpret,
+                                       time_chunk=bwd_spec[1], scales=s)
+    return (c, h), (wq, s, b, x, ct, ht)
+
+
+def _lstm_seq_q8_bwd(fwd_spec, bwd_spec, interpret, residuals, cotangents):
+    from repro.kernels import ref
+    if bwd_spec == ORACLE_BWD:
+        wq, s, b, x = residuals
+        _, vjp = jax.vjp(ref.lstm_seq, ref.dequantize_q8(wq, s), b, x)
+        return vjp(cotangents)          # dw wrt dequantized weights (STE)
+    from repro.kernels import lstm_seq_bwd as bwd_lib
+    wq, s, b, x, ct, ht = residuals
+    dc, dh = cotangents
+    return bwd_lib.lstm_seq_bwd(wq, b, x, ct, ht, dc, dh,
+                                block_b=bwd_spec[0], time_chunk=bwd_spec[1],
+                                interpret=interpret, scales=s)
+
+
+_lstm_seq_q8.defvjp(_lstm_seq_q8_fwd, _lstm_seq_q8_bwd)
+
+
+def _resolve_specs(B: int, T: int, L: int, P: int, H: int, *,
+                   dtype_bytes: int, w_dtype_bytes: int | None,
+                   quantized: bool, block_b: int | None,
+                   time_chunk: int | None, bwd_block_b: int | None,
+                   bwd_time_chunk: int | None):
+    """Shared ``(fwd_spec, bwd_spec)`` resolution for the f32 and q8 entry
+    points: explicit tiles pin the layout, otherwise ``choose_batch_block``
+    searches the (quantization-aware) joint surface.  Raises when even a
+    (bm=1, tc=1) forward tiling cannot fit — callers route to the per-cell
+    fallback (core/lstm automates this)."""
+    if block_b is None:
+        blocks = choose_batch_block(
+            B, T, L, P, H, dtype_bytes=dtype_bytes,
+            w_dtype_bytes=w_dtype_bytes, quantized=quantized)
+        if blocks is None:
+            raise ValueError(
+                f"sequence-resident working set (L={L}, P+H={P + H}, "
+                f"4H={4 * H}, quantized={quantized}) exceeds the VMEM "
+                "budget even at batch tile 1 with tc=1 time streaming; use "
+                "the per-cell fallback (core/lstm routes this "
+                "automatically)")
+        block_b = blocks.block_b
+        if time_chunk is None:         # explicit time_chunk survives auto-bm
+            time_chunk = blocks.time_chunk
+    fwd_spec = (block_b, time_chunk)
+    if bwd_block_b is None:
+        bwd_blocks = choose_batch_block(
+            B, T, L, P, H, dtype_bytes=dtype_bytes,
+            w_dtype_bytes=w_dtype_bytes, mode="bwd", quantized=quantized)
+        if bwd_blocks is None:
+            bwd_spec = ORACLE_BWD
+        elif bwd_time_chunk is not None:
+            bwd_spec = (bwd_blocks.block_b, bwd_time_chunk)
+        else:
+            bwd_spec = tuple(bwd_blocks)
+    elif bwd_block_b == ORACLE_BWD:
+        bwd_spec = ORACLE_BWD
+    else:
+        bwd_spec = (bwd_block_b, bwd_time_chunk)
+    return fwd_spec, bwd_spec
+
+
+def lstm_seq_q8(w: jax.Array, b: jax.Array, x: jax.Array, *,
+                block_b: int | None = None, time_chunk: int | None = None,
+                bwd_block_b: int | None = None,
+                bwd_time_chunk: int | None = None,
+                interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Whole-sequence stacked LSTM with int8-quantized weights, ONE dispatch.
+
+    Same contract as ``lstm_seq`` (w is the f32 MASTER (L, P+H, 4H) stack;
+    quantize/dequantize happen inside — per-output-channel symmetric int8,
+    see kernels/ref.quantize_q8), but the kernels hold the weight stack in
+    VMEM as int8 + (L, 4H) f32 scales — the dominant VMEM term quartered —
+    so ``choose_batch_block(quantized=True)`` admits whole-T residency and
+    coarse batch tiles at budgets where the f32 plan must stream or shrink.
+    Oracle: kernels/ref.lstm_seq_q8 (dequantize-then-run), matched within an
+    fp-rounding error band (the scale folds into the pre-activations); vs
+    the UNQUANTIZED plans the contract is the documented int8 error band
+    (tests/test_plan_equivalence.py).  Under ``jax.grad``: straight-through
+    gradients via the q8 reverse sweep, still 2 dispatches per
+    ``value_and_grad`` at any T.
+    """
+    L, H = w.shape[0], w.shape[-1] // 4
+    P = w.shape[1] - H
+    B, T, xw = x.shape
+    assert w.shape[1] == P + H and xw == P, (w.shape, x.shape)
+    fwd_spec, bwd_spec = _resolve_specs(
+        B, T, L, P, H, dtype_bytes=jnp.dtype(x.dtype).itemsize,
+        w_dtype_bytes=None, quantized=True, block_b=block_b,
+        time_chunk=time_chunk, bwd_block_b=bwd_block_b,
+        bwd_time_chunk=bwd_time_chunk)
+    return _lstm_seq_q8(w, b, x, fwd_spec, bwd_spec, interpret)
+
+
 def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
              block_b: int | None = None, time_chunk: int | None = None,
              bwd_block_b: int | None = None,
@@ -723,33 +973,9 @@ def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
     P = w.shape[1] - H
     B, T, xw = x.shape
     assert w.shape[1] == P + H and xw == P, (w.shape, x.shape)
-    dtype_bytes = jnp.dtype(x.dtype).itemsize
-    w_bytes = jnp.dtype(w.dtype).itemsize
-    if block_b is None:
-        blocks = choose_batch_block(
-            B, T, L, P, H, dtype_bytes=dtype_bytes, w_dtype_bytes=w_bytes)
-        if blocks is None:
-            raise ValueError(
-                f"sequence-resident working set (L={L}, P+H={P + H}, "
-                f"4H={4 * H}) exceeds the VMEM budget even at batch tile 1 "
-                "with tc=1 time streaming; use the per-cell fallback "
-                "(core/lstm.forward_fused_seq routes this automatically)")
-        block_b = blocks.block_b
-        if time_chunk is None:         # explicit time_chunk survives auto-bm
-            time_chunk = blocks.time_chunk
-    fwd_spec = (block_b, time_chunk)
-    if bwd_block_b is None:
-        bwd_blocks = choose_batch_block(
-            B, T, L, P, H, dtype_bytes=dtype_bytes, w_dtype_bytes=w_bytes,
-            mode="bwd")
-        if bwd_blocks is None:
-            bwd_spec = ORACLE_BWD
-        elif bwd_time_chunk is not None:
-            bwd_spec = (bwd_blocks.block_b, bwd_time_chunk)
-        else:
-            bwd_spec = tuple(bwd_blocks)
-    elif bwd_block_b == ORACLE_BWD:
-        bwd_spec = ORACLE_BWD
-    else:
-        bwd_spec = (bwd_block_b, bwd_time_chunk)
+    fwd_spec, bwd_spec = _resolve_specs(
+        B, T, L, P, H, dtype_bytes=jnp.dtype(x.dtype).itemsize,
+        w_dtype_bytes=jnp.dtype(w.dtype).itemsize, quantized=False,
+        block_b=block_b, time_chunk=time_chunk, bwd_block_b=bwd_block_b,
+        bwd_time_chunk=bwd_time_chunk)
     return _lstm_seq(w, b, x, fwd_spec, bwd_spec, interpret)

@@ -52,7 +52,7 @@ F32 = jnp.float32
 
 def _unwind_step(x_t, c_t, h_t, c_prev_all, h_prev_all, w_ref, b_ref,
                  dw_scr, db_scr, dc_scr, dh_scr,
-                 *, n_layers: int, p_width: int):
+                 *, n_layers: int, p_width: int, s_ref=None):
     """Unwind ALL layers of one timestep, updating the (dc, dh) carries and
     the dw/db accumulators in place; returns this step's dx row (bm, P).
 
@@ -61,11 +61,20 @@ def _unwind_step(x_t, c_t, h_t, c_prev_all, h_prev_all, w_ref, b_ref,
     c_prev_all/h_prev_all (L, bm, H, zeros at t == 0).  Shared by the
     whole-T-resident and time-chunked kernel bodies so the two layouts
     unwind bit-identically.
+
+    ``s_ref`` (optional): (L, 4H) f32 per-channel scales — the int8 path.
+    The gate recompute folds the scale into the pre-activations EXACTLY as
+    the q8 forward did (bit-identical recompute); the outgoing input/carry
+    grads dot ``dgates * s`` against the int8 block (dgates @ (wq*s)^T ==
+    (dgates*s) @ wq^T); the dw/db accumulation is unchanged — it is the
+    STRAIGHT-THROUGH gradient wrt the DEQUANTIZED weights, accumulated and
+    emitted in f32 for the master stack.
     """
     hidden = dc_scr.shape[-1]
     dinp = jnp.zeros_like(x_t)                           # from layer above
     for layer in range(n_layers - 1, -1, -1):            # static unroll
         w = w_ref[layer].astype(F32)                     # (P+H, 4H)
+        scale = None if s_ref is None else s_ref[layer].astype(F32)
         c_prev = c_prev_all[layer]
         h_prev = h_prev_all[layer]
         if layer == 0:
@@ -81,8 +90,10 @@ def _unwind_step(x_t, c_t, h_t, c_prev_all, h_prev_all, w_ref, b_ref,
                                 preferred_element_type=F32)
             + jax.lax.dot_general(h_prev, w[p_width:],
                                   (((1,), (0,)), ((), ())),
-                                  preferred_element_type=F32)
-            + b_ref[layer].astype(F32))
+                                  preferred_element_type=F32))
+        if scale is not None:
+            gates = gates * scale                        # fold channel scale
+        gates = gates + b_ref[layer].astype(F32)
         i, f, g, o = jnp.split(gates, 4, axis=-1)
         si, sf, so = (jax.nn.sigmoid(i), jax.nn.sigmoid(f),
                       jax.nn.sigmoid(o))
@@ -107,13 +118,15 @@ def _unwind_step(x_t, c_t, h_t, c_prev_all, h_prev_all, w_ref, b_ref,
         ], axis=0)                                       # (P+H, 4H)
         dw_scr[layer] = dw_scr[layer] + dw_rows
         db_scr[layer] = db_scr[layer] + jnp.sum(dgates, axis=0)
-        # outgoing grads: recurrence carry + the layer below / input
+        # outgoing grads: recurrence carry + the layer below / input —
+        # through the DEQUANTIZED weights on the q8 path
+        dg_w = dgates if scale is None else dgates * scale
         dh_scr[layer] = jax.lax.dot_general(
-            dgates, w[p_width:], (((1,), (1,)), ((), ())),
+            dg_w, w[p_width:], (((1,), (1,)), ((), ())),
             preferred_element_type=F32)                  # -> h_{t-1}[layer]
         dc_scr[layer] = dc * sf                          # -> c_{t-1}[layer]
         dinp = jax.lax.dot_general(
-            dgates, w[:p_width], (((1,), (1,)), ((), ())),
+            dg_w, w[:p_width], (((1,), (1,)), ((), ())),
             preferred_element_type=F32)                  # (bm, P)
     return dinp
 
@@ -122,7 +135,7 @@ def _seq_bwd_kernel(x_ref, w_ref, b_ref, ct_ref, ht_ref, dcf_ref, dhf_ref,
                     dw_ref, db_ref, dx_ref,
                     dw_scr, db_scr, dc_scr, dh_scr,
                     *, n_layers: int, seq_len: int, p_width: int,
-                    n_tiles: int, batch: int):
+                    n_tiles: int, batch: int, s_ref=None):
     """One batch tile unwinds the whole (T x L) recurrence from VMEM.
 
     x_ref: (T, bm, P); w_ref: (L, P+H, 4H); b_ref: (L, 4H);
@@ -169,7 +182,7 @@ def _seq_bwd_kernel(x_ref, w_ref, b_ref, ct_ref, ht_ref, dcf_ref, dhf_ref,
 
         dinp = _unwind_step(x_t, c_t, h_t, c_prev_all, h_prev_all,
                             w_ref, b_ref, dw_scr, db_scr, dc_scr, dh_scr,
-                            n_layers=n_layers, p_width=p_width)
+                            n_layers=n_layers, p_width=p_width, s_ref=s_ref)
         dx_ref[pl.ds(t, 1)] = dinp[None].astype(dx_ref.dtype)
         return carry
 
@@ -181,6 +194,20 @@ def _seq_bwd_kernel(x_ref, w_ref, b_ref, ct_ref, ht_ref, dcf_ref, dhf_ref,
         db_ref[...] = db_scr[...].astype(db_ref.dtype)
 
 
+def _seq_bwd_q8_kernel(x_ref, w_ref, s_ref, b_ref, ct_ref, ht_ref, dcf_ref,
+                       dhf_ref, dw_ref, db_ref, dx_ref,
+                       dw_scr, db_scr, dc_scr, dh_scr,
+                       *, n_layers: int, seq_len: int, p_width: int,
+                       n_tiles: int, batch: int):
+    """Int8-weight reverse sweep: the same unwind with the (L, 4H) f32
+    scales as an extra input and int8 weights VMEM-resident; dw/db emit in
+    f32 (straight-through master-weight gradients)."""
+    _seq_bwd_kernel(x_ref, w_ref, b_ref, ct_ref, ht_ref, dcf_ref, dhf_ref,
+                    dw_ref, db_ref, dx_ref, dw_scr, db_scr, dc_scr, dh_scr,
+                    n_layers=n_layers, seq_len=seq_len, p_width=p_width,
+                    n_tiles=n_tiles, batch=batch, s_ref=s_ref)
+
+
 def _seq_bwd_chunked_kernel(x_hbm, w_ref, b_ref, ct_hbm, ht_hbm,
                             dcf_ref, dhf_ref,
                             dw_ref, db_ref, dx_hbm,
@@ -189,7 +216,7 @@ def _seq_bwd_chunked_kernel(x_hbm, w_ref, b_ref, ct_hbm, ht_hbm,
                             xsem, csem, hsem, osem,
                             *, n_layers: int, seq_len: int, p_width: int,
                             tc: int, tw: int, nc: int, n_tiles: int,
-                            batch: int):
+                            batch: int, s_ref=None):
     """Time-chunked reverse sweep: the same BPTT unwind, but x and the two
     trajectories stream through double-buffered VMEM windows in REVERSE
     chunk order (chunk k-1 prefetches while chunk k computes) and dx streams
@@ -290,7 +317,8 @@ def _seq_bwd_chunked_kernel(x_hbm, w_ref, b_ref, ct_hbm, ht_hbm,
                 dinp = _unwind_step(x_t, c_t, h_t, c_prev_all, h_prev_all,
                                     w_ref, b_ref, dw_scr, db_scr,
                                     dc_scr, dh_scr,
-                                    n_layers=n_layers, p_width=p_width)
+                                    n_layers=n_layers, p_width=p_width,
+                                    s_ref=s_ref)
                 dxb[slot, t - k * tc] = dinp.astype(dxb.dtype)
             return c2
 
@@ -312,10 +340,31 @@ def _seq_bwd_chunked_kernel(x_hbm, w_ref, b_ref, ct_hbm, ht_hbm,
         db_ref[...] = db_scr[...].astype(db_ref.dtype)
 
 
+def _seq_bwd_chunked_q8_kernel(x_hbm, w_ref, s_ref, b_ref, ct_hbm, ht_hbm,
+                               dcf_ref, dhf_ref,
+                               dw_ref, db_ref, dx_hbm,
+                               xbuf, ctb, htb, dxb,
+                               dw_scr, db_scr, dc_scr, dh_scr,
+                               xsem, csem, hsem, osem,
+                               *, n_layers: int, seq_len: int, p_width: int,
+                               tc: int, tw: int, nc: int, n_tiles: int,
+                               batch: int):
+    """Int8-weight streamed reverse sweep (scales with the resident stack)."""
+    _seq_bwd_chunked_kernel(x_hbm, w_ref, b_ref, ct_hbm, ht_hbm,
+                            dcf_ref, dhf_ref, dw_ref, db_ref, dx_hbm,
+                            xbuf, ctb, htb, dxb,
+                            dw_scr, db_scr, dc_scr, dh_scr,
+                            xsem, csem, hsem, osem,
+                            n_layers=n_layers, seq_len=seq_len,
+                            p_width=p_width, tc=tc, tw=tw, nc=nc,
+                            n_tiles=n_tiles, batch=batch, s_ref=s_ref)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_b", "time_chunk", "interpret"))
 def _lstm_seq_bwd_call(w, b, x, ct, ht, dc, dh, block_b: int,
-                       time_chunk: int | None, interpret: bool):
+                       time_chunk: int | None, interpret: bool,
+                       scales=None):
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H
     B, T, _ = x.shape
@@ -324,15 +373,27 @@ def _lstm_seq_bwd_call(w, b, x, ct, ht, dc, dh, block_b: int,
     xt = jnp.swapaxes(x, 0, 1)                           # (T, B, P)
     if time_chunk is not None:
         return _lstm_seq_bwd_chunked_call(w, b, xt, ct, ht, dc, dh, bm,
-                                          min(time_chunk, T), interpret)
-    kernel = functools.partial(_seq_bwd_kernel, n_layers=L, seq_len=T,
-                               p_width=P, n_tiles=n_tiles, batch=B)
+                                          min(time_chunk, T), interpret,
+                                          scales=scales)
+    if scales is None:
+        kernel = functools.partial(_seq_bwd_kernel, n_layers=L, seq_len=T,
+                                   p_width=P, n_tiles=n_tiles, batch=B)
+        s_in, s_spec = (), ()
+        dw_dt, db_dt = w.dtype, b.dtype
+    else:
+        kernel = functools.partial(_seq_bwd_q8_kernel, n_layers=L,
+                                   seq_len=T, p_width=P, n_tiles=n_tiles,
+                                   batch=B)
+        s_in = (scales,)
+        s_spec = (pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),)
+        dw_dt, db_dt = F32, F32       # straight-through master-weight grads
     dw, db, dxt = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
         in_specs=[
             pl.BlockSpec((T, bm, P), lambda ib: (0, ib, 0)),
             pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            *s_spec,
             pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
             pl.BlockSpec((T, L, bm, H), lambda ib: (0, 0, ib, 0)),
             pl.BlockSpec((T, L, bm, H), lambda ib: (0, 0, ib, 0)),
@@ -348,8 +409,8 @@ def _lstm_seq_bwd_call(w, b, x, ct, ht, dc, dh, block_b: int,
             pl.BlockSpec((T, bm, P), lambda ib: (0, ib, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct(w.shape, w.dtype),
-            jax.ShapeDtypeStruct(b.shape, b.dtype),
+            jax.ShapeDtypeStruct(w.shape, dw_dt),
+            jax.ShapeDtypeStruct(b.shape, db_dt),
             jax.ShapeDtypeStruct(xt.shape, x.dtype),
         ],
         scratch_shapes=[
@@ -359,12 +420,12 @@ def _lstm_seq_bwd_call(w, b, x, ct, ht, dc, dh, block_b: int,
             pltpu.VMEM((L, bm, H), F32),                 # dh time-carry
         ],
         interpret=interpret,
-    )(xt, w, b, ct, ht, dc, dh)
+    )(xt, w, *s_in, b, ct, ht, dc, dh)
     return dw, db, jnp.swapaxes(dxt, 0, 1)               # dx: (B, T, P)
 
 
 def _lstm_seq_bwd_chunked_call(w, b, xt, ct, ht, dc, dh, bm: int, tc: int,
-                               interpret: bool):
+                               interpret: bool, scales=None):
     """Streamed reverse sweep: x + trajectories in HBM, O(tc) VMEM."""
     from repro.kernels.lstm_seq import _pad_batch
 
@@ -381,15 +442,26 @@ def _lstm_seq_bwd_chunked_call(w, b, xt, ct, ht, dc, dh, bm: int, tc: int,
     ht = _pad_batch(ht, 2, Bp)
     dc = _pad_batch(dc, 1, Bp)
     dh = _pad_batch(dh, 1, Bp)
-    kernel = functools.partial(_seq_bwd_chunked_kernel, n_layers=L,
-                               seq_len=T, p_width=P, tc=tc, tw=tw, nc=nc,
-                               n_tiles=n_tiles, batch=B)
+    if scales is None:
+        kernel = functools.partial(_seq_bwd_chunked_kernel, n_layers=L,
+                                   seq_len=T, p_width=P, tc=tc, tw=tw,
+                                   nc=nc, n_tiles=n_tiles, batch=B)
+        s_in, s_spec = (), ()
+        dw_dt, db_dt = w.dtype, b.dtype
+    else:
+        kernel = functools.partial(_seq_bwd_chunked_q8_kernel, n_layers=L,
+                                   seq_len=T, p_width=P, tc=tc, tw=tw,
+                                   nc=nc, n_tiles=n_tiles, batch=B)
+        s_in = (scales,)
+        s_spec = (pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),)
+        dw_dt, db_dt = F32, F32       # straight-through master-weight grads
     dw, db, dxt = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),        # x streams manually
             pl.BlockSpec((L, P + H, 4 * H), lambda ib: (0, 0, 0)),
+            *s_spec,
             pl.BlockSpec((L, 4 * H), lambda ib: (0, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),        # c_traj streams
             pl.BlockSpec(memory_space=pltpu.ANY),        # h_traj streams
@@ -404,8 +476,8 @@ def _lstm_seq_bwd_chunked_call(w, b, xt, ct, ht, dc, dh, bm: int, tc: int,
             pl.BlockSpec(memory_space=pltpu.ANY),        # dx streams out
         ],
         out_shape=[
-            jax.ShapeDtypeStruct(w.shape, w.dtype),
-            jax.ShapeDtypeStruct(b.shape, b.dtype),
+            jax.ShapeDtypeStruct(w.shape, dw_dt),
+            jax.ShapeDtypeStruct(b.shape, db_dt),
             jax.ShapeDtypeStruct((Tp, Bp, P), xt.dtype),
         ],
         scratch_shapes=[
@@ -423,12 +495,13 @@ def _lstm_seq_bwd_chunked_call(w, b, xt, ct, ht, dc, dh, bm: int, tc: int,
             pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
-    )(xt, w, b, ct, ht, dc, dh)
+    )(xt, w, *s_in, b, ct, ht, dc, dh)
     return dw, db, jnp.swapaxes(dxt[:T, :B], 0, 1)       # dx: (B, T, P)
 
 
 def lstm_seq_bwd(w, b, x, ct, ht, dc, dh, *, block_b: int,
-                 time_chunk: int | None = None, interpret: bool = True):
+                 time_chunk: int | None = None, interpret: bool = True,
+                 scales=None):
     """Whole-sequence BPTT in ONE dispatch: (dw, db, dx).
 
     w: (L, P+H, 4H); b: (L, 4H); x: (B, T, P) padded input;
@@ -439,6 +512,11 @@ def lstm_seq_bwd(w, b, x, ct, ht, dc, dh, *, block_b: int,
     ``time_chunk=None`` keeps x and both trajectories VMEM-resident;
     ``time_chunk=tc`` streams them in double-buffered reverse-order chunks
     (O(tc) residency, same gradients bit-for-bit).
+
+    ``scales`` (optional): (L, 4H) f32 per-channel scales for the int8 path
+    — ``w`` is then the int8 stack the q8 forward ran with, the gate
+    recompute folds the scales exactly as the forward did, and (dw, db)
+    come back in f32 (straight-through gradients for the master weights).
     """
     L, H = w.shape[0], w.shape[-1] // 4
     P = w.shape[1] - H
@@ -447,4 +525,4 @@ def lstm_seq_bwd(w, b, x, ct, ht, dc, dh, *, block_b: int,
         (w.shape, x.shape, ct.shape, ht.shape)
     assert dc.shape == (L, B, H) == dh.shape, (dc.shape, dh.shape)
     return _lstm_seq_bwd_call(w, b, x, ct, ht, dc, dh, block_b, time_chunk,
-                              interpret)
+                              interpret, scales=scales)

@@ -57,6 +57,28 @@ def lstm_seq(w: jax.Array, b: jax.Array, x: jax.Array, *,
                               interpret=interpret)
 
 
+def lstm_seq_q8(w: jax.Array, b: jax.Array, x: jax.Array, *,
+                interpret: bool = True, block_b: int | None = None,
+                time_chunk: int | None = None,
+                bwd_block_b: int | None = None,
+                bwd_time_chunk: int | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Int8-weight whole-sequence stacked LSTM — same single-dispatch
+    contract as ``lstm_seq`` but ``w`` is quantized to per-output-channel
+    symmetric int8 inside (kernels/ref.quantize_q8) and the kernels hold
+    the stack in VMEM as int8 + f32 scales, quartering the dominant weight
+    term.  Oracle: kernels/ref.lstm_seq_q8; training runs the q8 reverse
+    sweep with straight-through master-weight gradients (still exactly 2
+    dispatches per ``value_and_grad``).
+    """
+    from repro.kernels import lstm_seq as _lstm_seq
+    return _lstm_seq.lstm_seq_q8(w, b, x, block_b=block_b,
+                                 time_chunk=time_chunk,
+                                 bwd_block_b=bwd_block_b,
+                                 bwd_time_chunk=bwd_time_chunk,
+                                 interpret=interpret)
+
+
 def wkv6(r, k, v, logw, u, state, *, chunk: int = 32,
          interpret: bool = True):
     return _wkv6.wkv6(r, k, v, logw, u, state, chunk=chunk,

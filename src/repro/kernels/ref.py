@@ -103,6 +103,61 @@ def lstm_seq_traj(w: jax.Array, b: jax.Array, x: jax.Array
 
 
 # ---------------------------------------------------------------------------
+# Int8 weight quantization (kernels/lstm_seq.py `fused_seq_q8` plan)
+#
+# Contract (the "scale contract" in ROADMAP §Quantization): PER-OUTPUT-CHANNEL
+# symmetric int8 — one f32 scale per (layer, gate column), no zero point.
+# scale[l, j] = max_l_abs(w[l, :, j]) / 127, wq in [-127, 127], and the
+# dequantized weight is wq.astype(f32) * scale.  Biases stay f32.  The fused
+# kernels never materialise the dequantized stack: they dot against the int8
+# block cast to f32 and fold the per-channel scale into the gate
+# pre-activations ((x @ wq) * s == x @ (wq * s) exactly in reals, within fp
+# rounding on hardware) — so kernel-vs-oracle equivalence is an ERROR BAND,
+# not bit-exactness (tests/test_plan_equivalence.py documents both bands).
+# ---------------------------------------------------------------------------
+def quantize_q8(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric int8 quantization of a stacked weight
+    block.  w: (L, P+H, 4H) -> (wq int8 same shape, scales f32 (L, 4H))."""
+    w32 = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=1)                 # (L, 4H)
+    scales = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.round(w32 / scales[:, None, :])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scales
+
+
+def dequantize_q8(wq: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse map: (L, P+H, 4H) int8 x (L, 4H) f32 scales -> f32 weights."""
+    return wq.astype(jnp.float32) * scales[:, None, :]
+
+
+def quantize_dequantize_ste(w: jax.Array) -> jax.Array:
+    """Straight-through quantize-dequantize: forward value is the dequantized
+    int8 weight, gradient is the identity (d wdq / d w = 1).  This is the
+    differentiation contract of the fused q8 training path — gradients are
+    taken through the DEQUANTIZED weights the forward actually used, then
+    passed straight through to the f32 master weights."""
+    wdq = dequantize_q8(*quantize_q8(w))
+    return w.astype(jnp.float32) + jax.lax.stop_gradient(
+        wdq - w.astype(jnp.float32))
+
+
+def lstm_seq_q8(wq: jax.Array, scales: jax.Array, b: jax.Array, x: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """Dequantize-then-run oracle for the quantized sequence kernel: the
+    mathematical spec the fused q8 kernels are tested against (within the fp
+    rounding band of the folded per-channel scaling)."""
+    return lstm_seq(dequantize_q8(wq, scales), b, x)
+
+
+def lstm_seq_q8_traj(wq: jax.Array, scales: jax.Array, b: jax.Array,
+                     x: jax.Array
+                     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Trajectory-emitting oracle of the q8 training path (residual contract
+    of the quantized reverse sweep — same layout as ``lstm_seq_traj``)."""
+    return lstm_seq_traj(dequantize_q8(wq, scales), b, x)
+
+
+# ---------------------------------------------------------------------------
 # RWKV6 chunked wkv scan (kernels/wkv6.py)
 # ---------------------------------------------------------------------------
 def wkv6_chunk(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,

@@ -91,3 +91,29 @@ def test_roofline_dominant_term():
     r2 = analysis.Roofline(flops=1e12, hbm_bytes=1e15, coll_bytes={},
                            n_chips=256, model_flops=1e12)
     assert r2.dominant == "memory"
+
+
+def test_lstm_seq_stream_costs_quantized_weight_term():
+    """The quantization-aware roofline: int8 weights cut the streamed
+    weight traffic ~4x per batch tile (scales/f32-bias ride along), never
+    touch the activation/trajectory terms, and the bwd write-out stays f32
+    (straight-through master grads)."""
+    kw = dict(seq_len=128, n_layers=2, p_width=32, hidden=32, batch=8,
+              block_b=2, time_chunk=16)
+    f32 = analysis.lstm_seq_stream_costs(**kw)
+    q8 = analysis.lstm_seq_stream_costs(**kw, quantized=True)
+    w_count = 2 * (32 + 32) * 4 * 32
+    b_count = 2 * 4 * 32
+    # per-tile weight traffic: f32 stack vs int8 stack + f32 bias + scales
+    delta_per_tile = (w_count + b_count) * 4 - (w_count + b_count * 8)
+    n_tiles = 8 // 2
+    assert f32["hbm_bytes"] - q8["hbm_bytes"] == n_tiles * delta_per_tile
+    assert f32["flops"] == q8["flops"]          # same MXU work
+    # bwd: identical dw/db write-out (f32 either way), same per-tile delta
+    f32b = analysis.lstm_seq_stream_costs(**kw, mode="bwd")
+    q8b = analysis.lstm_seq_stream_costs(**kw, mode="bwd", quantized=True)
+    assert f32b["hbm_bytes"] - q8b["hbm_bytes"] == n_tiles * delta_per_tile
+    # resident side matches the kernel budget model
+    from repro.kernels import lstm_seq as seq_lib
+    assert q8["vmem_resident_bytes"] == seq_lib.working_set_bytes(
+        128, 2, 32, 32, 2, time_chunk=16, quantized=True)

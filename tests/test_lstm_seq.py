@@ -355,3 +355,172 @@ def test_chunked_dispatch_counts_unchanged():
             *a, block_b=2, time_chunk=2, bwd_block_b=2,
             bwd_time_chunk=2))(w, b, xp), w)
     assert n_train == 2
+
+
+# ---------------------------------------------------------------------------
+# Int8-weight kernels (fused_seq_q8): quantize/dequantize contract, oracle
+# agreement, straight-through gradients, chunked bit-identity, and the
+# quantization-aware budget table.
+# ---------------------------------------------------------------------------
+def test_q8_quantize_contract():
+    """Per-output-channel symmetric int8: one f32 scale per (layer, gate
+    column), |wq| <= 127, and dequantization bounded by half a quantization
+    step per element."""
+    w, _, _, _ = _make(2, 24, 9, 3, 5)
+    wq, scales = ref.quantize_q8(w)
+    assert wq.dtype == jnp.int8 and wq.shape == w.shape
+    assert scales.dtype == jnp.float32
+    assert scales.shape == (w.shape[0], w.shape[-1])
+    assert int(jnp.max(jnp.abs(wq.astype(jnp.int32)))) <= 127
+    wdq = ref.dequantize_q8(wq, scales)
+    err = jnp.abs(wdq - w)
+    assert float(jnp.max(err - scales[:, None, :] / 2)) <= 1e-6
+    # symmetric: quantizing -w flips the codes, same scales
+    wq_neg, scales_neg = ref.quantize_q8(-w)
+    np.testing.assert_array_equal(np.asarray(scales_neg), np.asarray(scales))
+    np.testing.assert_array_equal(np.asarray(wq_neg),
+                                  -np.asarray(wq, np.int32))
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 32, 9, 3, 7),      # paper-ish, odd batch/seq
+    (1, 8, 5, 2, 1),       # T=1 degenerate
+    (1, 16, 16, 4, 6),     # L=1, D == H (no padding)
+    (3, 16, 40, 5, 4),     # input_dim > hidden (P = D path)
+], ids=["odd", "T1", "L1", "DgtH"])
+def test_q8_matches_dequant_oracle(shape):
+    """The q8 kernel folds the per-channel scale into the pre-activations;
+    vs the dequantize-then-run oracle that is an fp-rounding band, nothing
+    coarser."""
+    w, b, xp, _ = _make(*shape)
+    wq, scales = ref.quantize_q8(w)
+    c_k, h_k = lstm_seq.lstm_seq_q8(w, b, xp)
+    c_r, h_r = ref.lstm_seq_q8(wq, scales, b, xp)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-4, atol=1e-5)
+
+
+def test_q8_traj_matches_oracle_contract():
+    """The q8 trajectory-emitting forward honours the same residual layout
+    as the f32 one (f32 (T, L, B, H) post-step states) against the
+    dequantize traj oracle."""
+    w, b, xp, _ = _make(2, 16, 9, 3, 7)
+    wq, scales = ref.quantize_q8(w)
+    wq_arr, s_arr = jnp.asarray(wq), jnp.asarray(scales)
+    c, h, ct, ht = lstm_seq._lstm_seq_traj_call(wq_arr, b, xp, 2, True,
+                                                scales=s_arr)
+    c_r, h_r, ct_r, ht_r = ref.lstm_seq_q8_traj(wq_arr, s_arr, b, xp)
+    assert ct.dtype == ht.dtype == jnp.float32
+    np.testing.assert_allclose(c, c_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ct, ct_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ht, ht_r, rtol=1e-5, atol=1e-6)
+
+
+def _q8_ste_loss(w, b, xp):
+    return _loss(lambda w, b, x: ref.lstm_seq(
+        ref.quantize_dequantize_ste(w), b, x))(w, b, xp)
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 32, 9, 3, 7), (1, 8, 5, 2, 1), (3, 16, 40, 5, 4),
+], ids=["odd", "T1", "DgtH"])
+def test_q8_bwd_matches_ste_oracle_grads(shape):
+    """The q8 reverse sweep reproduces the straight-through reference
+    gradients (grad through the dequantized weights, identity to the
+    masters) on the degenerate shapes."""
+    w, b, xp, _ = _make(*shape)
+    gk = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq_q8(
+        w, b, x, bwd_block_b=2)), argnums=(0, 1, 2))(w, b, xp)
+    gr = jax.grad(_q8_ste_loss, argnums=(0, 1, 2))(w, b, xp)
+    for a, r in zip(gk, gr):
+        assert bool(jnp.all(jnp.isfinite(a)))
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-5)
+    assert all(float(jnp.max(jnp.abs(g))) > 0 for g in gk)
+
+
+def test_q8_bwd_batch_tiling_invariance():
+    """Non-dividing batch tiles (masked shared dw/db accumulators) under
+    the q8 sweep still match the STE reference."""
+    w, b, xp, _ = _make(2, 24, 9, 5, 6)
+    gr = jax.grad(_q8_ste_loss, argnums=(0, 1, 2))(w, b, xp)
+    for block_b in (1, 2, 3, 5, 8):
+        gk = jax.grad(_loss(lambda w, b, x, bb=block_b: lstm_seq.lstm_seq_q8(
+            w, b, x, bwd_block_b=bb)), argnums=(0, 1, 2))(w, b, xp)
+        for a, r in zip(gk, gr):
+            np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("tc", [1, 2, 3, 7, 16])
+def test_q8_chunked_forward_bit_identical(tc):
+    """Time streaming composes with int8 weights: chunked and unchunked q8
+    kernels are bit-identical (chunking changes data movement only, for
+    every weight dtype)."""
+    w, b, xp, _ = _make(2, 16, 9, 3, 7)
+    want = lstm_seq.lstm_seq_q8(w, b, xp, block_b=2)
+    got = lstm_seq.lstm_seq_q8(w, b, xp, block_b=2, time_chunk=tc)
+    for a, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+@pytest.mark.parametrize("tc", [1, 3, 7])
+def test_q8_chunked_grads_bit_identical(tc):
+    """The streamed q8 reverse sweep leaves gradients EXACTLY equal to the
+    unchunked q8 sweep's — including the folded-scale gate recompute across
+    chunk boundaries."""
+    w, b, xp, _ = _make(2, 16, 9, 3, 7)
+    g_res = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq_q8(
+        w, b, x, bwd_block_b=2)), argnums=(0, 1, 2))(w, b, xp)
+    g_chn = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq_q8(
+        w, b, x, bwd_block_b=2, bwd_time_chunk=tc)),
+        argnums=(0, 1, 2))(w, b, xp)
+    for a, r in zip(g_chn, g_res):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+def test_q8_oracle_bwd_fallback_matches_kernel():
+    """bwd_block_b=ORACLE_BWD on the q8 path drops to the dequantize-oracle
+    VJP — same straight-through grads as the fused q8 sweep."""
+    w, b, xp, _ = _make(2, 16, 9, 3, 5)
+    g_forced = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq_q8(
+        w, b, x, bwd_block_b=lstm_seq.ORACLE_BWD)),
+        argnums=(0, 1, 2))(w, b, xp)
+    g_kernel = jax.grad(_loss(lambda w, b, x: lstm_seq.lstm_seq_q8(
+        w, b, x, bwd_block_b=2)), argnums=(0, 1, 2))(w, b, xp)
+    for a, r in zip(g_forced, g_kernel):
+        np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-5)
+
+
+def test_q8_choose_batch_block_widens_budget():
+    """The quantization-aware budget math, pure: with 1-byte weights the
+    table admits a (block_b, time_chunk) at budgets where f32 weights
+    return finer tiles or nothing at all."""
+    # (a) budget below the f32 weight-stack floor but above the int8 one:
+    # f32 not viable at all, q8 viable
+    f32_floor = lstm_seq.working_set_bytes(128, 2, 32, 32, 1, mode="fwd",
+                                           time_chunk=1)
+    q8_floor = lstm_seq.working_set_bytes(128, 2, 32, 32, 1, mode="fwd",
+                                          time_chunk=1, quantized=True)
+    assert q8_floor < f32_floor
+    budget = f32_floor - 1
+    assert lstm_seq.choose_batch_block(8, 128, 2, 32, 32,
+                                       vmem_budget=budget) is None
+    q8 = lstm_seq.choose_batch_block(8, 128, 2, 32, 32, vmem_budget=budget,
+                                     quantized=True)
+    assert q8 is not None
+    # (b) budget where f32 must stream but q8 keeps whole-T residency
+    ws_f32 = lstm_seq.working_set_bytes(128, 2, 32, 32, 8)
+    ws_q8 = lstm_seq.working_set_bytes(128, 2, 32, 32, 8, quantized=True)
+    assert ws_q8 < ws_f32
+    mid = ws_f32 - 1
+    f32_mid = lstm_seq.choose_batch_block(8, 128, 2, 32, 32, vmem_budget=mid)
+    q8_mid = lstm_seq.choose_batch_block(8, 128, 2, 32, 32, vmem_budget=mid,
+                                         quantized=True)
+    assert f32_mid is not None and f32_mid.time_chunk is not None
+    assert q8_mid == lstm_seq.SeqBlocks(8, None)
+    # (c) bwd floors: the f32 dw/db outs of the q8 plan cost MORE than int8
+    # outs would, yet the quartered weight stack still nets a lower floor
+    f32_bwd = lstm_seq.working_set_bytes(16, 2, 32, 32, 1, mode="bwd",
+                                         time_chunk=1)
+    q8_bwd = lstm_seq.working_set_bytes(16, 2, 32, 32, 1, mode="bwd",
+                                        time_chunk=1, quantized=True)
+    assert q8_bwd < f32_bwd

@@ -149,6 +149,64 @@ def test_plan_viability_long_T_streams_instead_of_filtering():
     assert floor("fused_cell") and floor("sequential")
 
 
+def test_plan_viability_quantized_widens_both_windows():
+    """ISSUE 5: the int8 plan's viability surface strictly contains the f32
+    plan's.  The inference-viable-vs-train-viable window shifts DOWN with
+    1-byte weights: budgets exist where (a) f32 is not even
+    inference-viable but q8 is, and (b) f32 training falls back while q8
+    training stays fused — because both (bm=1, tc=1) floors drop by the
+    quartered weight stack (fwd) / stack + f32-outs delta (bwd)."""
+    from repro.configs import MOBIRNN_LSTM
+    from repro.core import lstm
+    from repro.kernels import lstm_seq as seq_lib
+
+    cfg = MOBIRNN_LSTM
+    p_width = max(cfg.input_dim, cfg.hidden)
+
+    def floor(mode, quantized):
+        return seq_lib.working_set_bytes(
+            cfg.seq_len, cfg.n_layers, p_width, cfg.hidden, 1, mode=mode,
+            time_chunk=1, quantized=quantized)
+
+    # the q8 floors sit strictly below the f32 floors in both modes
+    assert floor("fwd", True) < floor("fwd", False)
+    assert floor("bwd", True) < floor("bwd", False)
+
+    # (a) inference window: below the f32 fwd floor, above the q8 one
+    budget = floor("fwd", False) - 1
+    infer = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=budget)
+    assert not infer("fused_seq")
+    assert infer("fused_seq_q8")
+    assert infer("fused_cell") and infer("sequential")
+
+    # (b) training window: below the f32 bwd floor, above the q8 one —
+    # the old inference-viable-but-not-train-viable gap now ALSO has a
+    # quantized escape hatch before the fused_cell fallback
+    budget = floor("bwd", False) - 1
+    assert budget > floor("bwd", True)
+    train = lstm.plan_viability(cfg, 8, cfg.seq_len, vmem_budget=budget,
+                                train=True)
+    assert not train("fused_seq")
+    assert train("fused_seq_q8")
+
+    # (c) below the q8 bwd floor both fused-seq plans are out; the q8 fwd
+    # can still be inference-viable there (its window is wider than its
+    # train window, exactly like f32)
+    budget = floor("bwd", True) - 1
+    train_tiny = lstm.plan_viability(cfg, 8, cfg.seq_len,
+                                     vmem_budget=budget, train=True)
+    assert not train_tiny("fused_seq_q8")
+    assert not train_tiny("fused_seq")
+    assert train_tiny("fused_cell") and train_tiny("sequential")
+    if budget >= floor("fwd", True):
+        assert lstm.plan_viability(cfg, 8, cfg.seq_len,
+                                   vmem_budget=budget)("fused_seq_q8")
+
+    # at a real budget every plan is viable in both modes
+    full = lstm.plan_viability(cfg, 8, cfg.seq_len, train=True)
+    assert full("fused_seq") and full("fused_seq_q8")
+
+
 # ---------------------------------------------------------------------------
 def _spec():
     return {"c": jax.ShapeDtypeStruct((2, 4), jnp.float32),
