@@ -389,6 +389,120 @@ def bench_quant_smoke() -> None:
         f"budget={STREAM_BUDGET}")
 
 
+def bench_rwkv_rows() -> None:
+    """rwkv/* rows: the rwkv6 family's chunked_scan plan holds its
+    registered dispatch contract on the fig2 T sweep — 1 forward / 2 train
+    Pallas dispatches at every T (the names contain "dispatch", so the
+    regression guard fails CI on any silent oracle-replay fallback), plus
+    the O(T/C) grid-step rows (count_pallas_grid_steps: BH * ceil(T/C),
+    the sequential work a dispatch count cannot see) and the chunk the
+    VMEM table picks at the mobile-class budget."""
+    import math
+
+    from repro.analysis import (count_kernel_dispatches,
+                                count_pallas_grid_steps,
+                                count_train_dispatches)
+    from repro.core import plans
+    from repro.kernels import wkv6 as wkv6_lib
+
+    B, H, dk, dv, chunk = 2, 2, 8, 8, 32
+    fam = plans.get_family("rwkv6")
+    for T in (128, 512, 2048):
+        case = plans.Case(f"bench_T{T}", (B, T, H, dk, dv, chunk))
+        args, _ = fam.make_inputs(case, "float32")
+        jx = jax.make_jaxpr(
+            lambda *a: plans.RWKV_PLANS["chunked_scan"](*a, chunk=chunk))(
+                *args)
+        n_fwd = count_kernel_dispatches(jx)
+        steps = count_pallas_grid_steps(jx)
+
+        def loss(*a):
+            out, s = plans.RWKV_PLANS["chunked_scan"](*a, chunk=chunk)
+            return jnp.sum(out) + jnp.sum(s)
+
+        n_train = count_train_dispatches(loss, *args)
+        jx2 = jax.make_jaxpr(jax.value_and_grad(loss, argnums=(0,)))(*args)
+        t_steps = count_pallas_grid_steps(jx2)
+        want = B * H * math.ceil(T / chunk)
+        row(f"rwkv/dispatch_chunked_scan_T{T}", float(n_fwd),
+            f"pallas_calls={n_fwd} (O(1) in T)")
+        row(f"rwkv/train_dispatch_chunked_scan_T{T}", float(n_train),
+            f"pallas_calls={n_train} (1 traj fwd + 1 reverse sweep)")
+        row(f"rwkv/grid_dispatch_steps_T{T}", float(steps),
+            f"grid_steps={steps} (BH*ceil(T/C)={want})")
+        row(f"rwkv/train_grid_dispatch_steps_T{T}", float(t_steps),
+            f"grid_steps={t_steps} (2x fwd)")
+        for mode in ("fwd", "bwd"):
+            blocks = wkv6_lib.choose_chunk(
+                T, dk, dv, target=chunk, vmem_budget=STREAM_BUDGET,
+                mode=mode)
+            row(f"rwkv/chunk_{mode}_T{T}",
+                float(blocks.chunk if blocks else 0),
+                f"chosen={tuple(blocks) if blocks else None}"
+                f",budget={STREAM_BUDGET}")
+
+
+def bench_rwkv_smoke() -> None:
+    """CI smoke (fast job): the rwkv6 registry acceptance, executed.
+
+    Asserts (a) the chunked_scan plan agrees with the stepwise oracle —
+    values AND gradients — at a dividing and a NON-dividing T, (b) its
+    dispatch counts match the PlanSpec (1 fwd / 2 train: no silent
+    oracle-replay backward), and (c) the chunk table is viable at the
+    mobile-class budget and halves rather than vanishing under pressure.
+    """
+    import numpy as np
+
+    from repro.analysis import count_kernel_dispatches, count_train_dispatches
+    from repro.core import plans
+    from repro.kernels import wkv6 as wkv6_lib
+
+    fam = plans.get_family("rwkv6")
+    spec = fam.plans["chunked_scan"]
+    for label, T in (("div", 64), ("nondiv", 61)):
+        case = plans.Case(f"smoke_{label}", (2, T, 2, 8, 8, 16))
+        inputs = fam.make_inputs(case, "float32")
+        got = fam.apply("chunked_scan", inputs)
+        want = fam.apply(fam.oracle, inputs)
+        for a, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(w),
+                                       **fam.tol("chunked_scan", "float32"))
+        gg = fam.grads("chunked_scan", inputs)
+        gw = fam.grads(fam.oracle, inputs)
+        for a, w in zip(jax.tree.leaves(gg), jax.tree.leaves(gw)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(w),
+                **fam.grad_tol("chunked_scan", "float32"))
+        (args, chunk) = inputs
+        n_fwd = count_kernel_dispatches(jax.make_jaxpr(
+            lambda *a: plans.RWKV_PLANS["chunked_scan"](*a, chunk=chunk))(
+                *args))
+
+        def loss(*a):
+            out, s = plans.RWKV_PLANS["chunked_scan"](*a, chunk=chunk)
+            return jnp.sum(out) + jnp.sum(s)
+
+        n_train = count_train_dispatches(loss, *args)
+        assert n_fwd == spec.fwd_dispatches, \
+            f"rwkv forward fell back at T={T}: {n_fwd} dispatches"
+        assert n_train == spec.train_dispatches, \
+            f"rwkv backward fell back at T={T}: {n_train} dispatches"
+
+    assert plans.rwkv_viability(2048, 64, 64,
+                                vmem_budget=STREAM_BUDGET)("chunked_scan")
+    full = wkv6_lib.choose_chunk(2048, 64, 64, target=32,
+                                 vmem_budget=STREAM_BUDGET)
+    assert full is not None
+    tight = wkv6_lib.choose_chunk(
+        2048, 64, 64, target=32,
+        vmem_budget=wkv6_lib.working_set_bytes(2048, 64, 64, full.chunk) - 1)
+    assert tight is not None
+    assert tight.chunk < full.chunk, (full, tight)   # halves, not vanishes
+    row("rwkv_smoke/chunked_scan", float(full.chunk),
+        f"fwd_dispatches=1,train_dispatches=2,chunk={full.chunk},"
+        f"budget={STREAM_BUDGET}")
+
+
 def bench_fig4_speedup() -> None:
     cfg = MOBIRNN_LSTM
     in_dim = cfg.input_dim + cfg.hidden
@@ -672,10 +786,17 @@ def main() -> None:
                          "agreement within the int8 error band, and the "
                          "no-finer q8 tiling at the mobile budget; the CI "
                          "fast-job invocation)")
+    ap.add_argument("--rwkv-smoke", action="store_true",
+                    help="run only the rwkv6 chunked-scan smoke (asserts "
+                         "registry equivalence vs the stepwise oracle — "
+                         "values and gradients, dividing and non-dividing "
+                         "T — plus the 1 fwd / 2 train dispatch contract "
+                         "and chunk-table viability at the mobile budget; "
+                         "the CI fast-job invocation)")
     ap.add_argument("--fig2", action="store_true",
                     help="run only the fig2 dispatch-count rows + the "
-                         "quant/* budget rows (the CI dispatch-regression "
-                         "guard input — see "
+                         "quant/* and rwkv/* rows (the CI "
+                         "dispatch-regression guard input — see "
                          "benchmarks/check_dispatch_regression.py)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as JSON (e.g. BENCH_PR4.json) "
@@ -691,15 +812,20 @@ def main() -> None:
         bench_stream_smoke()
     elif args.quant_smoke:
         bench_quant_smoke()
+    elif args.rwkv_smoke:
+        bench_rwkv_smoke()
     elif args.fig2:
         bench_fig2_dispatch_counts()
         bench_quant_rows()
+        bench_rwkv_rows()
     else:
         bench_fig2_dispatch_counts()
         bench_quant_rows()
+        bench_rwkv_rows()
         bench_chunk_sweep()
         bench_stream_smoke()
         bench_quant_smoke()
+        bench_rwkv_smoke()
         bench_fig3_factorization()
         bench_fig4_speedup()
         bench_fig5_complexity()

@@ -80,6 +80,42 @@ def count_train_dispatches(loss_fn, *args) -> int:
         jax.make_jaxpr(jax.value_and_grad(loss_fn))(*args))
 
 
+def count_pallas_grid_steps(jaxpr) -> int:
+    """Total Pallas GRID steps implied by a traced computation — the
+    family-aware complement to ``count_kernel_dispatches``.
+
+    Dispatch counts alone can't distinguish the chunked-scan plans' O(T/C)
+    sequential work from an O(T) one: both are ONE ``pallas_call``.  Each
+    pallas_call here contributes ``prod(grid)`` (e.g. the wkv6 kernel's
+    ``(BH, ceil(T/C))`` grid counts BH * ceil(T/C) steps), so halving the
+    chunk size doubles the number while the dispatch count stays 1 — the
+    quantity the rwkv dispatch-regression rows pin down.  scan/cond/while
+    recursion matches ``count_kernel_dispatches``; a pallas_call's own body
+    jaxpr is NOT recursed into (its kernel runs once per grid step by
+    definition).
+    """
+    import math
+
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            total += math.prod(eqn.params["grid_mapping"].grid)
+            continue
+        subs = [j for v in eqn.params.values() for j in _sub_jaxprs(v)]
+        if not subs:
+            continue
+        counts = [count_pallas_grid_steps(j) for j in subs]
+        if name == "scan":
+            total += eqn.params["length"] * sum(counts)
+        elif name == "cond":
+            total += max(counts)
+        else:                      # pjit / custom_vjp / while / remat ...
+            total += sum(counts)
+    return total
+
+
 def lstm_seq_stream_costs(seq_len: int, n_layers: int, p_width: int,
                           hidden: int, batch: int, block_b: int,
                           time_chunk: int | None, dtype_bytes: int = 4,

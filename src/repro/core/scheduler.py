@@ -34,6 +34,17 @@ that module's docstring for the full decision table):
   ``plan_viability`` sizes both surfaces so the per-tick Fig 7 choice sees
   the 4x smaller weight term.  Accuracy contract: int8 error band, not
   bit-equality — register it only where that band is acceptable.
+
+The scheduler itself is FAMILY-GENERIC: ``viable=`` is just a predicate
+over registered plan names, and core/plans.py is where families (lstm,
+rwkv6) publish their plans, equivalence policies, and the VMEM working-set
+models that build those predicates.  A multi-family scheduler combines
+them with ``plans.scheduler_viability({scheduler_name: (family_plan,
+family_predicate)})`` — e.g. ``accel_seq`` bound to the lstm family's
+``fused_seq`` via ``lstm.plan_viability(...)`` and ``accel_wkv`` bound to
+rwkv6's ``chunked_scan`` via ``plans.rwkv_viability(...)``; unbound names
+(CPU fallbacks) stay always-viable.  Non-viable plans are never calibrated
+and never chosen, exactly as for the single-family case.
 """
 from __future__ import annotations
 

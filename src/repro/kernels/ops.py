@@ -80,8 +80,8 @@ def lstm_seq_q8(w: jax.Array, b: jax.Array, x: jax.Array, *,
 
 
 def wkv6(r, k, v, logw, u, state, *, chunk: int = 32,
-         interpret: bool = True):
-    return _wkv6.wkv6(r, k, v, logw, u, state, chunk=chunk,
+         bwd: int = _wkv6.FUSED_BWD, interpret: bool = True):
+    return _wkv6.wkv6(r, k, v, logw, u, state, chunk=chunk, bwd=bwd,
                       interpret=interpret)
 
 

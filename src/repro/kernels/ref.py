@@ -181,7 +181,10 @@ def wkv6_chunk(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
     # intra-chunk term, j < i:  A[i,j,c] = exp(L_prev[i,c] - L[j,c])  (<= 0)
     diff = L_prev[:, None, :] - L[None, :, :]  # (C, C, dk)
     mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])
-    scores = jnp.einsum("ic,jc,ijc->ij", r, k, jnp.exp(diff)) * mask
+    # mask the exponent (j >= i entries are positive — exp would overflow
+    # under strong decay and NaN the einsum VJP), not the scores
+    diff = jnp.where(mask[:, :, None], diff, -jnp.inf)
+    scores = jnp.einsum("ic,jc,ijc->ij", r, k, jnp.exp(diff))
     out = out + scores @ v
     # bonus (diagonal) term
     out = out + jnp.einsum("ic,c,ic->i", r, u, k)[:, None] * v

@@ -1,4 +1,4 @@
-"""RWKV6 chunked-scan Pallas TPU kernel.
+"""RWKV6 chunked-scan Pallas TPU kernel — forward AND fused backward.
 
 This is MobiRNN's coarse work-unit factorization applied to the RWKV6
 recurrence: instead of T tiny sequential state updates (the "CUDA-style"
@@ -13,49 +13,152 @@ Numerical safety: all within-chunk decay exponents are differences
 L_a - L_b with a >= b of a running log-decay cumsum, hence <= 0 — no
 exp overflow regardless of decay strength (logw <= 0).
 
-Grid: (batch*heads, T/C); the chunk dimension is innermost (sequential on
-TPU), so the scratch state carries correctly.
+Grid: (batch*heads, ceil(T/C)); the chunk dimension is innermost (sequential
+on TPU), so the scratch state carries correctly.  Non-dividing T is
+zero-padded at the END: padded steps have r = k = v = 0 and logw = 0, which
+is the IDENTITY on the state (exp(0) = 1 decay, zero k^T v outer product)
+and contributes zero output rows that the wrapper slices off — so padding
+never changes results, only the grid extent.
+
+Autodiff: ``pallas_call`` has no VJP rule, so ``wkv6`` wraps the kernel in a
+``jax.custom_vjp`` mirroring kernels/lstm_seq.py.  Under differentiation the
+forward runs a trajectory-emitting variant (same math, same single dispatch)
+that additionally writes the CHUNK-INCOMING states ``s_traj
+(BH, nt, dk, dv)`` — the residual the backward recomputes from — and the
+backward runs the whole reverse-time sweep in ONE kernel dispatch: the grid
+walks chunks in reverse via reversed index maps, the state cotangent ``ds``
+lives in VMEM scratch across the sweep, ``du`` accumulates in scratch, and
+each chunk's (dr, dk, dv, dlogw) falls out of ``jax.vjp`` of the pure chunk
+math re-linearised from the stored incoming state.  ``value_and_grad`` is
+exactly 2 Pallas dispatches at any T — O(1) in T, O(T/C) grid steps
+(``analysis.count_pallas_grid_steps``).  ``bwd=ORACLE_BWD`` restores the
+oracle-VJP fallback (differentiate kernels/ref.wkv6), used when
+``choose_chunk(mode="bwd")`` finds no viable chunk.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import factorization
 
-def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
-            out_ref, s_out_ref, state):
-    t = pl.program_id(1)
-    nt = pl.num_programs(1)
-    f32 = jnp.float32
-    r = r_ref[0].astype(f32)        # (C, dk)
-    k = k_ref[0].astype(f32)
-    v = v_ref[0].astype(f32)        # (C, dv)
-    logw = lw_ref[0].astype(f32)    # (C, dk)
-    u = u_ref[0].astype(f32)        # (dk,)
+F32 = jnp.float32
+
+#: ``bwd=`` sentinel: differentiate the pure-jnp oracle instead of running
+#: the fused reverse sweep (the principled fallback past the bwd budget).
+ORACLE_BWD = 0
+#: ``bwd=`` default: ONE reverse-order Pallas dispatch for the whole sweep.
+FUSED_BWD = 1
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget — the (chunk,) analogue of lstm_seq's (block_b, time_chunk).
+# ---------------------------------------------------------------------------
+class WkvBlocks(NamedTuple):
+    """The chunked-scan kernel's tiling decision: the chunk length C.
+
+    The work-unit-coarseness knob of the WKV6 plan — larger C means denser
+    MXU matmuls and fewer grid steps (O(T/C)), at the price of the
+    (C, C, dk) f32 intra-chunk decay tensor, the dominant VMEM term."""
+    chunk: int
+
+
+def working_set_bytes(seq_len: int, dk: int, dv: int, chunk: int,
+                      dtype_bytes: int = 4, mode: str = "fwd") -> int:
+    """VMEM working set of one (batch-head, chunk) grid step.
+
+    ``mode="fwd"`` sizes the inference forward: the four (C, dk/dv) chunk
+    tiles + the output tile, u, the s0/s_out blocks, the f32 state scratch,
+    and the (C, C, dk) f32 intra-chunk decay tensor plus its (C, C) score
+    matrix — the term that grows quadratically in C and makes the chunk
+    length a real budget decision.
+
+    ``mode="bwd"`` sizes the reverse-sweep dispatch, which strictly
+    dominates the trajectory-emitting forward that feeds it: on top of the
+    forward set it holds the stored chunk-incoming state tile, the dout
+    cotangent tile, the mirrored (dr, dk, dv, dlogw) output tiles, the ds
+    state-cotangent scratch + ds0/ds_fin blocks, the du accumulator, and a
+    second copy of the intra-chunk tensors (the linearised chunk recompute
+    keeps forward values live while the cotangent flows back) — roughly 3x
+    the forward working set at typical head shapes.
+    """
+    if mode not in ("fwd", "bwd"):
+        raise ValueError(f"mode must be 'fwd' or 'bwd', got {mode!r}")
+    C = max(1, min(chunk, seq_len))
+    tiles_in = (3 * C * dk + C * dv) * dtype_bytes     # r, k, logw, v
+    out_tile = C * dv * dtype_bytes
+    u_bytes = dk * 4
+    state_io = 2 * dk * dv * 4                         # s0 in + s_out out
+    scratch = dk * dv * 4                              # carried state
+    intra = C * C * dk * 4 + C * C * 4                 # exp(diff) + scores
+    total = tiles_in + out_tile + u_bytes + state_io + scratch + intra
+    if mode == "bwd":
+        total += dk * dv * 4                           # s_traj chunk tile
+        total += out_tile                              # dout cotangent tile
+        total += tiles_in                              # dr/dk/dv/dlogw tiles
+        total += dk * dv * 4 + 2 * dk * dv * 4         # ds scratch + ds0/dsf
+        total += dk * 4                                # du accumulator
+        total += intra                                 # linearised recompute
+    return total
+
+
+def choose_chunk(seq_len: int, dk: int, dv: int, *, target: int = 32,
+                 dtype_bytes: int = 4, vmem_budget: int | None = None,
+                 mode: str = "fwd") -> WkvBlocks | None:
+    """Pick the chunk length, or None when not viable — the SeqBlocks-style
+    decision function the Fig 7 scheduler consumes via ``viable=``.
+
+    Coarseness search in MobiRNN order: start from ``target`` (the config's
+    chunk, clamped to T) and halve until the working set fits the budget.
+    Returns None only when even C=1 does not fit — i.e. the per-head state
+    blocks themselves blow VMEM; T alone never disqualifies the plan (the
+    grid streams chunks, residency is O(C) in sequence length).  Callers
+    then route to the stepwise/XLA plan (fwd) or the oracle VJP (bwd)."""
+    budget = factorization.DEFAULT_VMEM_BUDGET if vmem_budget is None \
+        else vmem_budget
+    c = max(1, min(target, seq_len))
+    while True:
+        if working_set_bytes(seq_len, dk, dv, c, dtype_bytes,
+                             mode=mode) <= budget:
+            return WkvBlocks(c)
+        if c == 1:
+            return None
+        c = max(c // 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# Shared chunk math — the single source of truth for fwd, traj, and bwd.
+# ---------------------------------------------------------------------------
+def _chunk_math(r, k, v, logw, u, s):
+    """One chunk of the recurrence in f32.  r,k,logw: (C, dk); v: (C, dv);
+    u: (dk,); s: (dk, dv).  Returns (out (C, dv), s_new (dk, dv)).
+
+    Shared by the plain and trajectory-emitting kernel bodies (so the two
+    forward dispatches are bit-identical) and DIFFERENTIATED via ``jax.vjp``
+    inside the reverse-sweep kernel body — the chunk backward needs no
+    hand-derived math, only the stored incoming state."""
     C = r.shape[0]
-
-    @pl.when(t == 0)
-    def _init():
-        state[...] = s0_ref[0].astype(f32)
-
-    s = state[...]                  # (dk, dv)
     L = jnp.cumsum(logw, axis=0)
     L_prev = L - logw
     # carry term r_i diag(exp(L_prev_i)) S  — one (C,dk)x(dk,dv) MXU matmul
-    out = jax.lax.dot(r * jnp.exp(L_prev), s,
-                      preferred_element_type=f32)
+    out = jax.lax.dot(r * jnp.exp(L_prev), s, preferred_element_type=F32)
     # intra-chunk: A[i,j,c] = exp(L_prev[i,c] - L[j,c]), j < i (exponent <= 0)
     diff = L_prev[:, None, :] - L[None, :, :]
     mask = (jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
             > jax.lax.broadcasted_iota(jnp.int32, (C, C), 1))
+    # mask the EXPONENT, not the scores: the j >= i entries are positive and
+    # overflow exp to inf under strong decay — the forward would mask the
+    # infs away, but the einsum VJP then multiplies inf by the zeroed
+    # cotangent and turns every gradient into NaN
+    diff = jnp.where(mask[:, :, None], diff, -jnp.inf)
     scores = jnp.einsum("ic,jc,ijc->ij", r, k, jnp.exp(diff),
-                        preferred_element_type=f32)
-    scores = jnp.where(mask, scores, 0.0)
-    out = out + jax.lax.dot(scores, v, preferred_element_type=f32)
+                        preferred_element_type=F32)
+    out = out + jax.lax.dot(scores, v, preferred_element_type=F32)
     # bonus diagonal term
     bonus = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)
     out = out + bonus * v
@@ -63,7 +166,27 @@ def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
     L_last = L[-1]
     decay_j = jnp.exp(L_last[None, :] - L)
     s_new = (jnp.exp(L_last)[:, None] * s
-             + jax.lax.dot((k * decay_j).T, v, preferred_element_type=f32))
+             + jax.lax.dot((k * decay_j).T, v, preferred_element_type=F32))
+    return out, s_new
+
+
+def _load_chunk(r_ref, k_ref, v_ref, lw_ref, u_ref):
+    return (r_ref[0].astype(F32), k_ref[0].astype(F32),
+            v_ref[0].astype(F32), lw_ref[0].astype(F32),
+            u_ref[0].astype(F32))
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+            out_ref, s_out_ref, state):
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+    r, k, v, logw, u = _load_chunk(r_ref, k_ref, v_ref, lw_ref, u_ref)
+
+    @pl.when(t == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(F32)
+
+    out, s_new = _chunk_math(r, k, v, logw, u, state[...])
     state[...] = s_new
     out_ref[0] = out.astype(out_ref.dtype)
 
@@ -72,40 +195,228 @@ def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
         s_out_ref[0] = s_new.astype(s_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
-         u: jax.Array, state: jax.Array, *, chunk: int = 32,
-         interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """Chunked RWKV6 scan over full sequences.
+def _traj_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                 out_ref, s_out_ref, straj_ref, state):
+    """Trajectory-emitting forward: same math and dispatch count as
+    ``_kernel``, plus the CHUNK-INCOMING state written to ``s_traj`` —
+    the residual the reverse sweep re-linearises each chunk from."""
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+    r, k, v, logw, u = _load_chunk(r_ref, k_ref, v_ref, lw_ref, u_ref)
 
-    r, k, logw: (BH, T, dk); v: (BH, T, dv); u: (BH, dk);
-    state: (BH, dk, dv).  T % chunk == 0.
-    Returns (out (BH, T, dv), final state (BH, dk, dv)).
-    """
+    @pl.when(t == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(F32)
+
+    s = state[...]
+    straj_ref[0, 0] = s                       # incoming state of chunk t
+    out, s_new = _chunk_math(r, k, v, logw, u, s)
+    state[...] = s_new
+    out_ref[0] = out.astype(out_ref.dtype)
+
+    @pl.when(t == nt - 1)
+    def _final():
+        s_out_ref[0] = s_new.astype(s_out_ref.dtype)
+
+
+def _bwd_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, straj_ref, do_ref,
+                dsf_ref, dr_ref, dk_ref, dv_ref, dlw_ref, du_ref, ds0_ref,
+                ds_scr, du_scr):
+    """Reverse-time BPTT sweep over chunks — ONE dispatch for the whole
+    backward.  The grid's chunk dimension is index-mapped in REVERSE, so
+    grid step t processes chunk nt-1-t; the state cotangent ``ds`` carries
+    across grid steps in VMEM scratch (seeded from the final-state
+    cotangent at reverse step 0), ``du`` accumulates in scratch and is
+    written once at the last reverse step, where ``ds0`` (the cotangent of
+    the incoming state) is also emitted."""
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+    r, k, v, logw, u = _load_chunk(r_ref, k_ref, v_ref, lw_ref, u_ref)
+    s_in = straj_ref[0, 0]                    # chunk-incoming state (f32)
+    dout = do_ref[0].astype(F32)
+
+    @pl.when(t == 0)
+    def _init():
+        ds_scr[...] = dsf_ref[0].astype(F32)
+        du_scr[...] = jnp.zeros_like(du_scr)
+
+    _, chunk_vjp = jax.vjp(_chunk_math, r, k, v, logw, u, s_in)
+    dr, dk, dv, dlw, du, ds_in = chunk_vjp((dout, ds_scr[...]))
+    ds_scr[...] = ds_in
+    du_scr[...] = du_scr[...] + du[None, :]
+    dr_ref[0] = dr.astype(dr_ref.dtype)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+    dlw_ref[0] = dlw.astype(dlw_ref.dtype)
+
+    @pl.when(t == nt - 1)                     # reverse-last = chunk 0
+    def _final():
+        du_ref[0] = du_scr[0].astype(du_ref.dtype)
+        ds0_ref[0] = ds_in.astype(ds0_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (T % chunk == 0 — the public entry pads)
+# ---------------------------------------------------------------------------
+def _chunk_specs(chunk: int, dk: int, dv: int):
+    return [
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
+        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, t, 0)),
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
+        pl.BlockSpec((1, dk), lambda b, t: (b, 0)),
+    ]
+
+
+def _fwd_call(r, k, v, logw, u, state, chunk, interpret, traj: bool):
     BH, T, dk = r.shape
     dv = v.shape[-1]
     assert T % chunk == 0, (T, chunk)
     nt = T // chunk
-    out, s_out = pl.pallas_call(
-        _kernel,
+    in_specs = _chunk_specs(chunk, dk, dv) + [
+        pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, t, 0)),
+        pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((BH, T, dv), v.dtype),
+        jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32),
+    ]
+    kernel = _kernel
+    if traj:
+        kernel = _traj_kernel
+        out_specs.append(pl.BlockSpec((1, 1, dk, dv),
+                                      lambda b, t: (b, t, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((BH, nt, dk, dv), jnp.float32))
+    return pl.pallas_call(
+        kernel,
         grid=(BH, nt),
-        in_specs=[
-            pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1, chunk, dv), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1, dk), lambda b, t: (b, 0)),
-            pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, chunk, dv), lambda b, t: (b, t, 0)),
-            pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((BH, T, dv), v.dtype),
-            jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
         interpret=interpret,
     )(r, k, v, logw, u, state)
+
+
+def _bwd_call(r, k, v, logw, u, s_traj, dout, ds_fin, s0_dtype, chunk,
+              interpret):
+    BH, T, dk = r.shape
+    dv = v.shape[-1]
+    nt = T // chunk
+    rev = nt - 1                              # reversed chunk index map
+
+    in_specs = [
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, dk), lambda b, t: (b, 0)),
+        pl.BlockSpec((1, 1, dk, dv), lambda b, t: (b, rev - t, 0, 0)),
+        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((1, dk), lambda b, t: (b, 0)),
+        pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(r.shape, r.dtype),
+        jax.ShapeDtypeStruct(k.shape, k.dtype),
+        jax.ShapeDtypeStruct(v.shape, v.dtype),
+        jax.ShapeDtypeStruct(logw.shape, logw.dtype),
+        jax.ShapeDtypeStruct(u.shape, u.dtype),
+        jax.ShapeDtypeStruct((BH, dk, dv), s0_dtype),
+    ]
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(BH, nt),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32),
+                        pltpu.VMEM((1, dk), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, s_traj, dout, ds_fin)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP — 1 dispatch fwd, 2 dispatches per value_and_grad
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _wkv6(r, k, v, logw, u, s0, chunk, bwd, interpret):
+    out, s_out = _fwd_call(r, k, v, logw, u, s0, chunk, interpret,
+                           traj=False)
     return out, s_out
+
+
+def _wkv6_fwd(r, k, v, logw, u, s0, chunk, bwd, interpret):
+    if bwd == ORACLE_BWD:
+        out, s_out = _fwd_call(r, k, v, logw, u, s0, chunk, interpret,
+                               traj=False)
+        return (out, s_out), (r, k, v, logw, u, s0, None)
+    out, s_out, s_traj = _fwd_call(r, k, v, logw, u, s0, chunk, interpret,
+                                   traj=True)
+    return (out, s_out), (r, k, v, logw, u, s0, s_traj)
+
+
+def _oracle(r, k, v, logw, u, s0, chunk):
+    """Batched pure-jnp reference with the kernel's exact output dtypes —
+    the oracle-VJP fallback differentiates this."""
+    from repro.kernels import ref
+
+    out, s_out = jax.vmap(
+        lambda rr, kk, vv, ww, uu, ss: ref.wkv6(rr, kk, vv, ww, uu, ss,
+                                                chunk))(r, k, v, logw, u, s0)
+    return out.astype(v.dtype), s_out.astype(jnp.float32)
+
+
+def _wkv6_bwd(chunk, bwd, interpret, residuals, cots):
+    r, k, v, logw, u, s0, s_traj = residuals
+    dout, ds_fin = cots
+    if bwd == ORACLE_BWD:
+        _, oracle_vjp = jax.vjp(
+            lambda *a: _oracle(*a, chunk), r, k, v, logw, u, s0)
+        return oracle_vjp((dout, ds_fin))
+    return _bwd_call(r, k, v, logw, u, s_traj, dout, ds_fin, s0.dtype,
+                     chunk, interpret)
+
+
+_wkv6.defvjp(_wkv6_fwd, _wkv6_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bwd", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+         u: jax.Array, state: jax.Array, *, chunk: int = 32,
+         bwd: int = FUSED_BWD,
+         interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Chunked RWKV6 scan over full sequences — ONE Pallas dispatch.
+
+    r, k, logw: (BH, T, dk); v: (BH, T, dv); u: (BH, dk);
+    state: (BH, dk, dv).  Any T — non-dividing sequences are zero-padded to
+    the next chunk multiple (identity on the state: logw = 0, zero kv) and
+    the padded output rows sliced off.  ``chunk`` is clamped to T.
+    Returns (out (BH, T, dv), final state (BH, dk, dv) f32).
+
+    Differentiable: under ``jax.grad`` the forward becomes the
+    trajectory-emitting kernel and the backward ONE reverse-sweep dispatch
+    (``bwd=FUSED_BWD``, the default) — or the oracle VJP replay
+    (``bwd=ORACLE_BWD``) when the caller's ``choose_chunk(mode="bwd")``
+    found no viable chunk.
+    """
+    BH, T, dk = r.shape
+    chunk = max(1, min(chunk, T))
+    pad = (-T) % chunk
+    if pad:
+        def zpad(a):
+            return jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+    out, s_out = _wkv6(r, k, v, logw, u, state, chunk, bwd, interpret)
+    return (out[:, :T] if pad else out), s_out

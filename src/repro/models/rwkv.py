@@ -114,9 +114,11 @@ def wkv_chunked(r, k, v, logw, u, state, chunk: int):
         L = jnp.cumsum(ww, axis=2)
         L_prev = L - ww
         out = jnp.einsum("bhck,bhkv->bhcv", rr * jnp.exp(L_prev), s)
-        diff = jnp.exp(L_prev[:, :, :, None, :] - L[:, :, None, :, :])
+        # mask the exponent, not the scores: j >= i entries are positive
+        # and would overflow exp under strong decay, NaN-ing the VJP
+        diff = L_prev[:, :, :, None, :] - L[:, :, None, :, :]
+        diff = jnp.exp(jnp.where(mask[..., None], diff, -jnp.inf))
         scores = jnp.einsum("bhik,bhjk,bhijk->bhij", rr, kk, diff)
-        scores = scores * mask
         out = out + jnp.einsum("bhij,bhjv->bhiv", scores, vv)
         bonus = jnp.einsum("bhck,hk,bhck->bhc", rr, u.astype(f32), kk)
         out = out + bonus[..., None] * vv
@@ -162,14 +164,22 @@ def apply_tmix(p: dict, cfg: ModelConfig, x: jax.Array, x_prev: jax.Array,
     return _apply_tmix_local(p, cfg, x, x_prev, state)
 
 
-def _apply_tmix_local(p, cfg, x, x_prev, state):
+#: default core/plans.RWKV_PLANS plan for the full-sequence scan — the
+#: registry is the single decision table for which wkv execution runs
+#: ("chunked_xla" wraps wkv_chunked below; "chunked_scan" is the fused
+#: Pallas kernel; "stepwise" the per-step oracle).  Override per call via
+#: ``_apply_tmix_local(..., plan=...)`` or globally for experiments.
+WKV_PLAN = "chunked_xla"
+
+
+def _apply_tmix_local(p, cfg, x, x_prev, state, plan: str | None = None):
+    from repro.core import plans as plans_lib
+
     B, S, d = x.shape
     H = n_heads(cfg)
     r, k, v, g, logw, shift = _project(p, cfg, x, x_prev)
-    chunk = cfg.ssm.chunk
-    while S % chunk:          # largest divisor of S not above cfg chunk
-        chunk -= 1
-    out, state = wkv_chunked(r, k, v, logw, p["u"], state, chunk)
+    wkv_fn = plans_lib.RWKV_PLANS[plan or WKV_PLAN]
+    out, state = wkv_fn(r, k, v, logw, p["u"], state, chunk=cfg.ssm.chunk)
     out = common.apply_groupnorm(p["gn"], out.reshape(B, S, d), H)
     out = (out.astype(x.dtype) * g) @ p["wo"]
     return out, shift, state

@@ -1,18 +1,24 @@
-"""The exact execution plans are the SAME function (core/lstm docstring);
-the int8 plan matches within its documented error band.
+"""Every plan of every registered family is the SAME function (or sits
+inside its documented error band) — with the sweep GENERATED from the
+family-generic plan registry (core/plans.py).
 
-Parametrized over plan x dtype x deliberately awkward shapes (odd batch,
-short prime-ish T, hidden sizes that do not divide the Pallas block sizes)
-so block padding, wavefront masking, and the sequence kernel's batch tiling
-are all exercised off the happy path.  ``forward_sequential`` is the oracle.
+``plans.value_sweep()`` / ``plans.grad_sweep()`` enumerate plans x dtypes x
+deliberately awkward shapes per family (odd batch, short prime-ish T,
+hidden sizes that do not divide the Pallas block sizes; for rwkv6: C=1,
+C=T, non-dividing T, chunk > T), each compared leaf-wise against the
+family's oracle under the plan's registered equivalence policy.  Adding a
+family to the registry adds it to this sweep — nothing here is
+LSTM-specific anymore.
 
-``fused_seq_q8`` is excluded from the exact sweeps: its contract is the
-ERROR-BAND equivalence of the Q8 section below — tight agreement with the
-dequantize oracle (fp rounding of the folded per-channel scale), int8-band
-agreement with the f32 plans, and straight-through gradients that match the
-STE reference (ref.quantize_dequantize_ste) exactly-math.
+``fused_seq_q8`` carries a band policy with no oracle-gradient contract:
+its training guarantee is the ERROR-BAND Q8 section below — tight
+agreement with the dequantize oracle (fp rounding of the folded
+per-channel scale), int8-band agreement with the f32 plans, and
+straight-through gradients that match the STE reference
+(ref.quantize_dequantize_ste) exactly-math.
 """
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -20,28 +26,19 @@ import numpy as np
 import pytest
 
 from repro.configs.mobirnn_lstm import LSTMConfig
-from repro.core import lstm
+from repro.core import lstm, plans
 
-# (batch, seq_len, hidden, input_dim, n_layers) — none block-aligned
-SHAPES = [
-    (3, 7, 48, 9, 2),      # the issue's canonical odd shape
-    (1, 5, 33, 9, 3),      # B=1, hidden 33 (not even lane-aligned)
-    (5, 3, 16, 40, 2),     # input_dim > hidden: P = max(D, H) padding path
-]
-TOL = {"float32": dict(rtol=2e-5, atol=2e-5),
-       "bfloat16": dict(rtol=5e-2, atol=5e-2)}
+#: the LSTM family's shapes, re-exported for the Q8/streaming sections
+SHAPES = [c.shape for c in plans.get_family("lstm").cases]
 
-#: exact-equivalence plans: everything but the oracle and the int8 plan
-EXACT_PLANS = [n for n in lstm.FORWARD_PLANS
-               if n not in ("sequential", "fused_seq_q8")]
+#: exact-equivalence plans of the lstm family (the historical constant;
+#: the jit/Q8 sections still iterate it)
+EXACT_PLANS = [n for n, s in plans.get_family("lstm").plans.items()
+               if s.policy.kind == "exact" and n != "sequential"]
 
-#: THE documented int8 error band (ROADMAP §Quantization): per-output-
-#: channel symmetric int8 bounds each dequantized weight within
-#: max|w_col|/254 of f32, and the saturating LSTM nonlinearities keep the
-#: recurrence from amplifying it — logits land within 5e-2 of the f32
-#: plans at the paper shapes (measured headroom ~5x).  Kernel-vs-dequant-
-#: oracle agreement is far tighter (fp rounding only): Q8_ORACLE_TOL.
-Q8_BAND = dict(rtol=5e-2, atol=5e-2)
+Q8_BAND = plans.Q8_BAND
+#: kernel-vs-dequant-oracle agreement is far tighter than the int8 band
+#: (fp rounding of the folded per-channel scale only)
 Q8_ORACLE_TOL = dict(rtol=1e-4, atol=1e-5)
 
 
@@ -55,17 +52,36 @@ def _setup(shape, dtype):
     return cfg, params, x
 
 
-@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
-@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "b{}t{}h{}d{}l{}"
-                         .format(*s))
-@pytest.mark.parametrize("plan", EXACT_PLANS)
-def test_plan_matches_sequential(plan, shape, dtype):
-    cfg, params, x = _setup(shape, dtype)
-    want = lstm.forward_sequential(params, x, cfg)
-    got = lstm.FORWARD_PLANS[plan](params, x, cfg)
-    assert got.shape == want.shape and got.dtype == want.dtype
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), **TOL[dtype])
+def _sweep_params(sweep):
+    return [pytest.param(sc, id=sc.id,
+                         marks=[pytest.mark.slow] if sc.heavy else [])
+            for sc in sweep]
+
+
+def test_registry_preserves_forward_plans():
+    """Acceptance: the registry SERVES core/lstm.FORWARD_PLANS — same
+    names, same functions — rather than forking them."""
+    fam = plans.get_family("lstm")
+    assert list(fam.plans) == list(lstm.FORWARD_PLANS)
+    for name, spec in fam.plans.items():
+        assert spec.fn is lstm.FORWARD_PLANS[name]
+    assert fam.oracle == "sequential"
+
+
+@pytest.mark.parametrize("sc", _sweep_params(plans.value_sweep()))
+def test_plan_matches_oracle(sc):
+    """Registry-generated value sweep: every comparable plan of every
+    family, against that family's oracle, at the registered tolerance."""
+    fam = plans.get_family(sc.family)
+    inputs = fam.make_inputs(sc.case, sc.dtype)
+    got = fam.apply(sc.plan, inputs)
+    want = fam.apply(fam.oracle, inputs)
+    for a, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.shape == w.shape and a.dtype == w.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(w, np.float32),
+                                   **fam.tol(sc.plan, sc.dtype),
+                                   err_msg=sc.id)
 
 
 def test_plans_agree_under_jit_and_grad():
@@ -87,13 +103,12 @@ def test_plans_agree_under_jit_and_grad():
 
 # ---------------------------------------------------------------------------
 # GRADIENT equivalence: every plan is the same function under jax.grad too
-# (fused_seq via the fused reverse-sweep kernel, fused_cell via the per-cell
-# oracle VJP, wavefront via plain autodiff) — the training-story guarantee.
+# (fused_seq via the fused reverse-sweep kernel, rwkv6 chunked_scan via the
+# reverse-sweep wkv kernel, fused_cell via the per-cell oracle VJP,
+# wavefront via plain autodiff) — the training-story guarantee, generated
+# from the registry: only (plan, dtype) pairs whose policy registers a
+# grad_tol participate (the q8 plan's gradient contract is the STE test).
 # ---------------------------------------------------------------------------
-TOL_GRAD = {"float32": dict(rtol=2e-4, atol=2e-5),
-            "bfloat16": dict(rtol=8e-2, atol=8e-2)}
-
-
 def _grads(plan, cfg, params, x, labels):
     fwd = lstm.FORWARD_PLANS[plan]
     _, g = jax.value_and_grad(
@@ -101,38 +116,19 @@ def _grads(plan, cfg, params, x, labels):
     return g
 
 
-def _assert_grads_match(plan, shape, dtype):
-    cfg, params, x = _setup(shape, dtype)
-    labels = jnp.arange(shape[0]) % cfg.n_classes
-    want = _grads("sequential", cfg, params, x, labels)
-    got = _grads(plan, cfg, params, x, labels)
+@pytest.mark.parametrize("sc", _sweep_params(plans.grad_sweep()))
+def test_grad_matches_oracle(sc):
+    fam = plans.get_family(sc.family)
+    inputs = fam.make_inputs(sc.case, sc.dtype)
+    got = fam.grads(sc.plan, inputs)
+    want = fam.grads(fam.oracle, inputs)
     for a, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         assert a.dtype == w.dtype and a.shape == w.shape
         assert bool(jnp.all(jnp.isfinite(a.astype(jnp.float32))))
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(w, np.float32),
-                                   **TOL_GRAD[dtype])
-
-
-@pytest.mark.parametrize("plan", EXACT_PLANS)
-def test_grad_matches_sequential_fast(plan):
-    """Quick-loop guard: the canonical odd shape, float32."""
-    _assert_grads_match(plan, SHAPES[0], "float32")
-
-
-@pytest.mark.slow
-@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
-@pytest.mark.parametrize("shape", SHAPES[1:], ids=lambda s: "b{}t{}h{}d{}l{}"
-                         .format(*s))
-@pytest.mark.parametrize("plan", EXACT_PLANS)
-def test_grad_matches_sequential_sweep(plan, shape, dtype):
-    _assert_grads_match(plan, shape, dtype)
-
-
-@pytest.mark.slow
-@pytest.mark.parametrize("plan", EXACT_PLANS)
-def test_grad_matches_sequential_bf16_canonical(plan):
-    _assert_grads_match(plan, SHAPES[0], "bfloat16")
+                                   **fam.grad_tol(sc.plan, sc.dtype),
+                                   err_msg=sc.id)
 
 
 def test_value_and_grad_dispatches_O1_in_T():
@@ -160,6 +156,86 @@ def test_value_and_grad_dispatches_O1_in_T():
                                forward=lstm.FORWARD_PLANS["fused_cell"]),
         params)
     assert n_cell == 6 * 2, n_cell
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 dispatch counts (ISSUE 6): the chunked_scan plan honours its
+# registered dispatch expectations — ONE forward dispatch, TWO per
+# value_and_grad (trajectory-emitting forward + one reverse-sweep
+# backward), at every T — and its sequential grid work is O(T/C), pinned by
+# the family-aware grid-step counter.
+# ---------------------------------------------------------------------------
+def _rwkv_case(T, chunk, B=2, H=2, dk=8, dv=8):
+    case = plans.Case(f"T{T}c{chunk}", (B, T, H, dk, dv, chunk))
+    return plans.get_family("rwkv6").make_inputs(case, "float32")
+
+
+def _rwkv_loss(args, chunk, plan="chunked_scan"):
+    def loss(*a):
+        out, s = plans.RWKV_PLANS[plan](*a, chunk=chunk)
+        return (jnp.sum(out.astype(jnp.float32))
+                + jnp.sum(s.astype(jnp.float32)))
+    return loss, args
+
+
+def test_rwkv_chunked_scan_dispatches_match_registry():
+    """fwd_dispatches/train_dispatches registered on the PlanSpec hold at
+    every T, dividing or not — a silent oracle-replay backward would show
+    up as extra forward dispatches here."""
+    from repro.analysis import count_kernel_dispatches, count_train_dispatches
+
+    spec = plans.get_family("rwkv6").plans["chunked_scan"]
+    for T in (8, 24, 23):
+        args, chunk = _rwkv_case(T, 8)
+        n_fwd = count_kernel_dispatches(jax.make_jaxpr(
+            lambda *a: plans.RWKV_PLANS["chunked_scan"](*a, chunk=chunk))(
+                *args))
+        loss, a = _rwkv_loss(args, chunk)
+        n_train = count_train_dispatches(loss, *a)
+        assert n_fwd == spec.fwd_dispatches, (T, n_fwd)
+        assert n_train == spec.train_dispatches, (T, n_train)
+
+
+def test_rwkv_grid_steps_O_T_over_C():
+    """count_pallas_grid_steps sees the O(T/C) sequential structure the
+    dispatch count cannot: BH * ceil(T/C) forward grid steps, twice that
+    for value_and_grad, and halving the chunk doubles both."""
+    from repro.analysis import count_pallas_grid_steps
+
+    B, H = 2, 2
+    for T, chunk in ((24, 8), (23, 8), (24, 4)):
+        args, _ = _rwkv_case(T, chunk, B=B, H=H)
+        want = B * H * math.ceil(T / chunk)
+        jx = jax.make_jaxpr(
+            lambda *a: plans.RWKV_PLANS["chunked_scan"](*a, chunk=chunk))(
+                *args)
+        assert count_pallas_grid_steps(jx) == want, (T, chunk)
+        loss, a = _rwkv_loss(args, chunk)
+        jx2 = jax.make_jaxpr(jax.value_and_grad(loss, argnums=(0,)))(*a)
+        assert count_pallas_grid_steps(jx2) == 2 * want, (T, chunk)
+
+
+def test_rwkv_oracle_bwd_fallback_keeps_single_forward():
+    """bwd=ORACLE_BWD (the past-budget fallback) still runs the fused
+    forward kernel once; only the backward replays the jnp oracle — the
+    shape plan_viability(train=True) routes to past the bwd budget."""
+    from repro.analysis import count_kernel_dispatches, count_train_dispatches
+    from repro.kernels import wkv6 as wkv6_lib
+
+    args, chunk = _rwkv_case(16, 8)
+
+    def plan(*a):
+        return plans.RWKV_PLANS["chunked_scan"](
+            *a, chunk=chunk, bwd=wkv6_lib.ORACLE_BWD)
+
+    n_fwd = count_kernel_dispatches(jax.make_jaxpr(plan)(*args))
+
+    def loss(*a):
+        out, s = plan(*a)
+        return jnp.sum(out) + jnp.sum(s)
+
+    n_train = count_train_dispatches(loss, *args)
+    assert (n_fwd, n_train) == (1, 1), (n_fwd, n_train)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) on the hardened WKV6 chunked-scan
+kernel (kernels/wkv6.py) — the rwkv6 family's fused fast path.
+
+Three invariants the chunk-size decision and the log-space formulation are
+supposed to buy:
+
+* every decay exponent the kernel ever exponentiates is a difference of
+  log-decay cumsums with the later index subtracted — <= 0 by
+  construction, so exp never overflows no matter how strong the decay;
+* outputs and the carried state stay FINITE under extreme decay
+  magnitudes and mixed input dtypes (bf16 r/k/v over the f32 log-decays);
+* the scan is a monoid over the carried state: splitting a sequence at an
+  ARBITRARY boundary and resuming from the returned state reproduces the
+  unsplit run — the serving contract (kv-state handoff between requests)
+  and, because the pieces rarely divide the chunk, a standing exercise of
+  the identity zero-padding path.
+
+hypothesis is an OPTIONAL dev dependency (requirements-dev.txt); without
+it this module must skip at collection, not kill the tier-1 run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import wkv6 as wkv6_lib  # noqa: E402
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _inputs(T, dk, dv, seed, decay_scale=1.0, dtype=jnp.float32, BH=2):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r = jax.random.normal(ks[0], (BH, T, dk), dtype)
+    k = jax.random.normal(ks[1], (BH, T, dk), dtype)
+    v = jax.random.normal(ks[2], (BH, T, dv), dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (BH, T, dk))) * decay_scale
+    u = jax.random.normal(ks[4], (BH, dk))
+    s0 = jax.random.normal(ks[5], (BH, dk, dv)) * 0.3
+    return r, k, v, logw, u, s0
+
+
+# ---------------------------------------------------------------------------
+# exponent sign: everything under exp is <= 0 by construction
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(1, 16), st.integers(0, 2 ** 31 - 1),
+       st.floats(1e-3, 1e3))
+def test_decay_exponents_nonpositive(C, seed, decay_scale):
+    """The three exponent families of the chunk math — L_prev itself (the
+    carry term), the masked intra-chunk differences L_prev[i] - L[j] for
+    j < i, and the state-update differences L_last - L — are <= 0 whenever
+    logw <= 0, at any chunk size and decay magnitude, up to cumsum
+    rounding: entries that are mathematically empty sums (j = i-1) are
+    computed as differences of two large nearly-equal cumsums, so they may
+    carry a few ulps of |L| above zero — which keeps exp at O(1) instead
+    of overflowing, the property the kernel actually needs."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 1)[0]
+    logw = -jnp.exp(jax.random.normal(ks, (C, 4))) * decay_scale
+    L = jnp.cumsum(logw, axis=0)
+    L_prev = L - logw
+    slack = 64 * jnp.finfo(jnp.float32).eps * jnp.maximum(
+        jnp.max(jnp.abs(L)), 1.0)
+    assert bool(jnp.all(L_prev <= slack))
+    diff = L_prev[:, None, :] - L[None, :, :]
+    mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])[:, :, None]
+    assert bool(jnp.all(jnp.where(mask, diff, 0.0) <= slack))
+    assert bool(jnp.all(L[-1][None, :] - L <= slack))
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1.0, 10.0, 1e3, 1e6]),
+       st.sampled_from(["float32", "bfloat16"]))
+def test_outputs_finite_under_extreme_decay(seed, decay_scale, dtype):
+    """No inf/nan from the kernel even when single-step log-decays reach
+    -1e6 (state effectively zeroed every step) or inputs are bf16: the
+    log-space differences keep every exponent <= 0, so exp underflows to 0
+    instead of overflowing."""
+    T, dk, dv = 19, 8, 8      # non-dividing T: the pad path is in the loop
+    r, k, v, logw, u, s0 = _inputs(T, dk, dv, seed, decay_scale,
+                                   jnp.dtype(dtype))
+    out, s_out = wkv6_lib.wkv6(r, k, v, logw, u, s0, chunk=8)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+    assert bool(jnp.all(jnp.isfinite(s_out)))
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_grads_finite_under_extreme_decay(seed):
+    """The fused reverse sweep inherits the same exponent bound (its
+    jax.vjp re-linearises the identical chunk math), so training gradients
+    stay finite under strong decay too."""
+    T, dk, dv = 13, 4, 4
+    args = _inputs(T, dk, dv, seed, decay_scale=1e3)
+
+    def loss(*a):
+        out, s = wkv6_lib.wkv6(*a, chunk=4)
+        return jnp.sum(jnp.tanh(out.astype(jnp.float32))) + jnp.sum(s * s)
+
+    grads = jax.grad(loss, argnums=tuple(range(6)))(*args)
+    for g in grads:
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# state carry: split anywhere, resume from the returned state
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(st.integers(1, 22), st.integers(0, 2 ** 31 - 1),
+       st.integers(1, 12))
+def test_split_resume_matches_unsplit(split, seed, chunk):
+    """wkv6 over [0:t) then [t:T) with the state handed across equals one
+    wkv6 over [0:T) — for ANY split point and chunk size, i.e. the chunk
+    grid and the zero-padding are invisible to the recurrence semantics."""
+    T, dk, dv = 23, 6, 6
+    r, k, v, logw, u, s0 = _inputs(T, dk, dv, seed)
+    out_full, s_full = wkv6_lib.wkv6(r, k, v, logw, u, s0, chunk=chunk)
+    cut = lambda a, lo, hi: a[:, lo:hi]
+    out_a, s_mid = wkv6_lib.wkv6(cut(r, 0, split), cut(k, 0, split),
+                                 cut(v, 0, split), cut(logw, 0, split),
+                                 u, s0, chunk=chunk)
+    out_b, s_end = wkv6_lib.wkv6(cut(r, split, T), cut(k, split, T),
+                                 cut(v, split, T), cut(logw, split, T),
+                                 u, s_mid, chunk=chunk)
+    np.testing.assert_allclose(np.concatenate([out_a, out_b], axis=1),
+                               np.asarray(out_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_end), np.asarray(s_full),
+                               rtol=2e-4, atol=2e-4)
