@@ -678,6 +678,118 @@ def bench_serving() -> None:
         f"tok_per_s={n_tok / t_slot:.1f},speedup_vs_wave="
         f"{t_wave / t_slot:.2f}x,live_buffers_delta={live1 - live0}")
 
+    # per-request latency distributions from the engine's always-on obs
+    # metrics (accumulated over warmup + timed serves): TTFT is
+    # admit->first-token-on-host, TBT the per-lane gap between decode
+    # tokens — the serving numbers MobiRNN-style tuning should move
+    ttft = slot.metrics.histogram("serving/ttft_s").summary()
+    tbt = slot.metrics.histogram("serving/tbt_s").summary()
+    row("serving/slot_ttft_p50", ttft["p50"] * 1e6,
+        f"p99_us={ttft['p99'] * 1e6:.1f},n={ttft['count']}")
+    row("serving/slot_tbt_p50", tbt["p50"] * 1e6,
+        f"p99_us={tbt['p99'] * 1e6:.1f},n={tbt['count']}")
+
+
+def bench_obs_smoke(trace_path: str = "BENCH_ci_obs_trace.jsonl",
+                    profile_path: str = "BENCH_ci_obs_profile.json") -> None:
+    """CI smoke (fast job): the ISSUE 7 observability acceptance, executed.
+
+    Asserts (a) a traced SlotEngine run produces well-formed JSONL with
+    per-tick spans (plan + tick latency), per-request TTFT admit events,
+    nested sched/choose decisions, and the end-of-stream metrics summary
+    (queue depth gauge, deadline-miss counter); (b) tracing changes NO
+    tokens and keeps the zero-allocation invariant; (c) the measured
+    profiler sweeps >= 2 viable tiling points for BOTH families, the
+    profile round-trips through save/load, ``Scheduler.calibrate`` seeds
+    base latencies from it, and the model-vs-measured report carries a
+    finite ratio per point.  The trace and profile files are uploaded as
+    CI artifacts next to the BENCH_ci_*.json rows.
+    """
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.models import registry
+    from repro.obs import profile as profile_lib
+    from repro.obs import trace as trace_lib
+    from repro.partitioning import split
+    from repro.serving import Request, SlotEngine
+
+    cfg = dataclasses.replace(
+        get_arch("qwen2-0.5b").reduced(), n_layers=2, d_model=64,
+        n_heads=2, n_kv_heads=1, head_dim=16, d_ff=128, vocab=128)
+    model = registry.build(cfg)
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in (5, 3, 7, 4, 6, 3)]
+    news = [6, 4, 5, 6, 3, 4]
+
+    def reqs():
+        return [Request(i, p, max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(prompts, news))]
+
+    # --- traced vs untraced serving: token-identical, zero-alloc --------
+    plain = SlotEngine(model, params, n_slots=2, max_seq=32)
+    base = {r.uid: r.tokens.tolist() for r in plain.serve(reqs())}
+    old = trace_lib.set_tracer(trace_lib.Tracer(trace_lib.JsonlSink(
+        trace_path)))
+    try:
+        traced_eng = SlotEngine(model, params, n_slots=2, max_seq=32)
+        traced = {r.uid: r.tokens.tolist()
+                  for r in traced_eng.serve(reqs())}
+    finally:
+        trace_lib.get_tracer().close()
+        trace_lib.set_tracer(old)
+    assert traced == base, "tracing changed greedy outputs"
+    assert traced_eng.pool.stats.buffers_built == 1, \
+        "traced serving run rebuilt pool buffers"
+
+    events = trace_lib.read_jsonl(trace_path)
+    assert events, "empty trace"
+    ticks = [e for e in events if e["name"] == "serve/tick"]
+    admits = [e for e in events if e["name"] == "serve/admit"]
+    chooses = [e for e in events if e["name"] == "sched/choose"]
+    summaries = [e for e in events if e["name"] == "serve/metrics"]
+    assert ticks and all("plan" in e["attrs"] and "tick_s" in e["attrs"]
+                         for e in ticks), "malformed serve/tick spans"
+    assert len(admits) == len(news) and all(
+        e["attrs"]["ttft_s"] > 0 for e in admits), "missing TTFT events"
+    tick_ids = {e["span"] for e in ticks}
+    assert chooses and all(e["parent"] in tick_ids for e in chooses), \
+        "sched/choose not nested under serve/tick"
+    assert summaries and "serving/deadline_miss" in \
+        summaries[-1]["attrs"]["counters"], "missing metrics summary"
+    row("obs_smoke/trace", float(len(events)),
+        f"ticks={len(ticks)},admits={len(admits)},file={trace_path}")
+
+    # --- measured profiler: both families, save/load, calibrate seed ----
+    prof = profile_lib.profile_families(
+        ("lstm", "rwkv6"), vmem_budget=STREAM_BUDGET, repeats=1, warmup=1,
+        max_points=2,
+        hook_kwargs={"lstm": {"batch": 2, "seq_len": 16},
+                     "rwkv6": {"seq_len": 32, "n_bh": 2, "target": 8}})
+    for fam in ("lstm", "rwkv6"):
+        n = sum(p.family == fam for p in prof.points)
+        assert n >= 2, f"profiler swept {n} < 2 points for {fam}"
+    prof.save(profile_path)
+    prof2 = profile_lib.DeviceProfile.load(profile_path)
+    assert prof2.to_json() == prof.to_json(), "profile did not round-trip"
+
+    sched = Scheduler(SyntheticLoadSensor(0.0))
+    sched.register(Plan("fused_seq", lambda: None))
+    sched.register(Plan("chunked_scan", lambda: None))
+    sched.calibrate(profile=prof2.best_latencies())
+    assert all(np.isfinite(p.base_latency_s)
+               for p in sched.plans.values()), "profile seeding failed"
+
+    report = profile_lib.model_vs_measured(prof2, threshold=3.0)
+    assert len(report) == len(prof.points) and all(
+        r["finite"] for r in report), "non-finite model-vs-measured ratio"
+    worst = max(r["ratio"] for r in report)
+    row("obs_smoke/profile", float(len(prof.points)),
+        f"families=2,key={prof.key},max_ratio={worst:.3g},"
+        f"file={profile_path}")
+
 
 def bench_kernels() -> None:
     from repro.kernels import ops, ref
@@ -793,6 +905,19 @@ def main() -> None:
                          "T — plus the 1 fwd / 2 train dispatch contract "
                          "and chunk-table viability at the mobile budget; "
                          "the CI fast-job invocation)")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="run only the observability smoke (traced serving "
+                         "run: per-tick spans, TTFT, token identity, "
+                         "zero-alloc; measured 2-point profiler sweep for "
+                         "both families with save/load round-trip, "
+                         "calibrate seeding and a finite model-vs-measured "
+                         "ratio; the CI fast-job invocation — writes "
+                         "BENCH_ci_obs_trace.jsonl + "
+                         "BENCH_ci_obs_profile.json)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable structured tracing for the whole run and "
+                         "write JSONL records (spans/events; see "
+                         "ROADMAP §Observability) to PATH")
     ap.add_argument("--fig2", action="store_true",
                     help="run only the fig2 dispatch-count rows + the "
                          "quant/* and rwkv/* rows (the CI "
@@ -802,6 +927,11 @@ def main() -> None:
                     help="also write the rows as JSON (e.g. BENCH_PR4.json) "
                          "for cross-PR perf tracking")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import trace as trace_lib
+
+        trace_lib.configure(path=args.trace)
 
     print("name,us_per_call,derived")
     if args.serving:
@@ -814,6 +944,8 @@ def main() -> None:
         bench_quant_smoke()
     elif args.rwkv_smoke:
         bench_rwkv_smoke()
+    elif args.obs_smoke:
+        bench_obs_smoke()
     elif args.fig2:
         bench_fig2_dispatch_counts()
         bench_quant_rows()
@@ -839,6 +971,11 @@ def main() -> None:
     print(f"\n{len(ROWS)} benchmarks complete")
     if args.json:
         write_json(args.json)
+    if args.trace:
+        from repro.obs import trace as trace_lib
+
+        trace_lib.get_tracer().close()
+        print(f"wrote trace to {args.trace}")
 
 
 if __name__ == "__main__":

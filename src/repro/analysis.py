@@ -199,6 +199,55 @@ def lstm_seq_stream_costs(seq_len: int, n_layers: int, p_width: int,
     }
 
 
+def wkv6_stream_costs(seq_len: int, n_bh: int, dk: int, dv: int,
+                      chunk: int, dtype_bytes: int = 4,
+                      mode: str = "fwd") -> dict[str, float]:
+    """Roofline terms for ONE chunked-scan WKV6 dispatch — the rwkv6
+    analogue of ``lstm_seq_stream_costs``, priced from the kernels/wkv6
+    grid: per (batch-head, chunk) step the four (C, dk/dv) input tiles
+    stream HBM->VMEM once and the output tile streams back, while the
+    (dk, dv) recurrent state stays in VMEM scratch for the whole sweep —
+    that residency is the point of the kernel.
+
+    FLOPs per chunk are the three MXU matmuls of ``_chunk_math`` (carry
+    term, intra-chunk scores, score application) plus the state update:
+    ``2*C*C*dk + 2*C*C*dv + 4*C*dk*dv``.  ``mode="bwd"`` sizes the
+    reverse-sweep dispatch: the linearised chunk recompute roughly
+    triples compute, and the stored state trajectory plus the mirrored
+    cotangent tiles stream on top of the forward traffic.
+
+    Returns the same keys as ``lstm_seq_stream_costs`` (``flops``,
+    ``hbm_bytes``, ``vmem_resident_bytes``, ``t_compute``, ``t_memory``)
+    so obs/profile.py's model-vs-measured report can join either family.
+    """
+    from repro.kernels import wkv6 as wkv6_lib
+
+    if mode not in ("fwd", "bwd"):
+        raise ValueError(f"mode must be 'fwd' or 'bwd', got {mode!r}")
+    C = max(1, min(chunk, seq_len))
+    nc = math.ceil(seq_len / C)
+    per_chunk_flops = 2 * C * C * dk + 2 * C * C * dv + 4 * C * dk * dv
+    tiles_in = (3 * C * dk + C * dv) * dtype_bytes       # r, k, logw, v
+    out_tile = C * dv * dtype_bytes
+    per_chunk_bytes = tiles_in + out_tile
+    state_io = n_bh * (2 * dk * dv * 4 + dk * 4)         # s0 + s_out + u
+    flops = n_bh * nc * per_chunk_flops
+    hbm_bytes = n_bh * nc * per_chunk_bytes + state_io
+    if mode == "bwd":
+        flops *= 3                      # linearised recompute + cot flow
+        # stored per-chunk state trajectory in, dout in, dr/dk/dv/dlogw out
+        hbm_bytes += n_bh * nc * (dk * dv * 4 + out_tile + tiles_in)
+    resident = wkv6_lib.working_set_bytes(seq_len, dk, dv, C, dtype_bytes,
+                                          mode=mode)
+    return {
+        "flops": float(flops),
+        "hbm_bytes": float(hbm_bytes),
+        "vmem_resident_bytes": float(resident),
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": hbm_bytes / HBM_BW,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Analytic parameter counts
 # ---------------------------------------------------------------------------

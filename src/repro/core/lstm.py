@@ -179,7 +179,13 @@ def _forward_fused_seq_impl(params: dict, x: jax.Array, cfg: LSTMConfig, *,
         B, T, cfg.n_layers, p_width, cfg.hidden,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
         w_dtype_bytes=w_bytes, quantized=quantized)
+    from repro.obs import trace as trace_lib
+    tracer = trace_lib.get_tracer()
+    plan_name = "fused_seq_q8" if quantized else "fused_seq"
     if blocks is None:    # weight stack > VMEM even at (bm=1, tc=1)
+        if tracer.enabled:   # the silent fallback, made visible
+            tracer.event("plan/dispatch", family="lstm", plan=plan_name,
+                         fallback="fused_cell", batch=B, seq_len=T)
         return forward_fused_kernel(params, x, cfg, interpret=interpret)
     bwd_blocks = seq_lib.choose_batch_block(
         B, T, cfg.n_layers, p_width, cfg.hidden,
@@ -191,6 +197,12 @@ def _forward_fused_seq_impl(params: dict, x: jax.Array, cfg: LSTMConfig, *,
     else:
         bwd_kw = dict(bwd_block_b=bwd_blocks.block_b,
                       bwd_time_chunk=bwd_blocks.time_chunk)
+    if tracer.enabled:
+        tracer.event("plan/dispatch", family="lstm", plan=plan_name,
+                     block_b=blocks.block_b, time_chunk=blocks.time_chunk,
+                     bwd_block_b=bwd_kw.get("bwd_block_b"),
+                     bwd_time_chunk=bwd_kw.get("bwd_time_chunk"),
+                     batch=B, seq_len=T)
     op = kernel_ops.lstm_seq_q8 if quantized else kernel_ops.lstm_seq
     _, h = op(w_stack, b_stack, xp, block_b=blocks.block_b,
               time_chunk=blocks.time_chunk, interpret=interpret, **bwd_kw)

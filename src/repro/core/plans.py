@@ -70,6 +70,22 @@ class PlanSpec(NamedTuple):
     train_dispatches: int | None = None
 
 
+class ProfileCandidate(NamedTuple):
+    """One measurable point on a family's viable tiling surface —
+    what ``Family.profile_hook`` yields and obs/profile.py times.
+
+    ``fn`` is a ready-to-call (typically jitted) callable over ``args``;
+    ``point`` holds the JSON-able tiling coordinates (``block_b`` /
+    ``time_chunk`` / ``chunk``); ``model_s`` is the analytic roofline
+    prediction the model-vs-measured report divides against."""
+    family: str
+    plan: str
+    point: dict
+    fn: Callable
+    args: tuple
+    model_s: float | None = None
+
+
 class Case(NamedTuple):
     """One sweep shape.  ``heavy`` cases are slow-marked in the value
     sweep; gradient sweeps additionally treat ``heavy_grad`` (and every
@@ -98,6 +114,11 @@ class Family:
     #: family-specific keyword signature; returns the Fig 7 ``viable=``
     #: predicate (plan name -> bool) from the VMEM working-set model
     viability: Callable[..., Callable[[str], bool]]
+    #: measured-profiler hook: ``(vmem_budget=..., max_points=..., **shape
+    #: overrides) -> list[ProfileCandidate]`` enumerating the viable
+    #: tiling surface for obs/profile.profile_families to time; None means
+    #: the family opts out of measured profiling
+    profile_hook: Callable[..., list] | None = None
 
     def comparable_plans(self) -> list[str]:
         return [n for n in self.plans if n != self.oracle]
@@ -260,6 +281,57 @@ def _lstm_viability(*args, **kwargs):
     return lstm.plan_viability(*args, **kwargs)
 
 
+def _lstm_profile_candidates(*, vmem_budget: int | None = None,
+                             max_points: int = 4, batch: int = 4,
+                             seq_len: int = 48) -> list[ProfileCandidate]:
+    """Measured-profiler candidates: jitted ``fused_seq`` dispatches over
+    a deterministic slice of the viable ``(block_b, time_chunk)`` surface
+    at the canonical MobiRNN layer shape — coarsest tilings first (whole-T
+    residency, full batch), then finer time chunks and batch halves, each
+    admitted only if ``working_set_bytes`` fits the budget.  ``model_s``
+    is the two-term roofline of ``analysis.lstm_seq_stream_costs``."""
+    import functools
+
+    from repro import analysis
+    from repro.configs.mobirnn_lstm import LSTMConfig
+    from repro.core import factorization as fz
+    from repro.core import lstm as lstm_lib
+    from repro.kernels import lstm_seq as seq_lib
+
+    cfg = LSTMConfig()
+    budget = fz.DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    p = lstm_lib._plain_params(
+        lstm_lib.init_params(jax.random.PRNGKey(0), cfg))
+    w, b, p_width = seq_lib.stack_params(p["layers"], cfg.hidden)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (batch, seq_len, cfg.input_dim), jnp.float32)
+    xp = seq_lib.pad_input(x, p_width)
+
+    time_chunks: list[int | None] = [None]
+    for t in (seq_len // 2, seq_len // 4):
+        if 1 <= t < seq_len and t not in time_chunks:
+            time_chunks.append(t)
+    out: list[ProfileCandidate] = []
+    for bm in sorted({batch, max(1, batch // 2)}, reverse=True):
+        for tc in time_chunks:
+            if len(out) >= max_points:
+                return out
+            ws = seq_lib.working_set_bytes(
+                seq_len, cfg.n_layers, p_width, cfg.hidden, bm,
+                time_chunk=tc)
+            if ws > budget:
+                continue
+            fn = jax.jit(functools.partial(
+                seq_lib.lstm_seq, block_b=bm, time_chunk=tc))
+            costs = analysis.lstm_seq_stream_costs(
+                seq_len, cfg.n_layers, p_width, cfg.hidden, batch, bm, tc)
+            out.append(ProfileCandidate(
+                "lstm", "fused_seq", {"block_b": bm, "time_chunk": tc},
+                fn, (w, b, xp),
+                model_s=max(costs["t_compute"], costs["t_memory"])))
+    return out
+
+
 def _build_lstm_family() -> Family:
     from repro.core import lstm
 
@@ -277,7 +349,8 @@ def _build_lstm_family() -> Family:
     return Family(
         name="lstm", oracle="sequential", plans=specs, cases=_LSTM_CASES,
         dtypes=("float32", "bfloat16"), make_inputs=_lstm_make_inputs,
-        apply=_lstm_apply, grads=_lstm_grads, viability=_lstm_viability)
+        apply=_lstm_apply, grads=_lstm_grads, viability=_lstm_viability,
+        profile_hook=_lstm_profile_candidates)
 
 
 # ===========================================================================
@@ -419,6 +492,46 @@ def rwkv_viability(seq_len: int, dk: int, dv: int, *, chunk: int = 32,
     return viable
 
 
+def _rwkv_profile_candidates(*, vmem_budget: int | None = None,
+                             max_points: int = 4, seq_len: int = 64,
+                             n_bh: int = 4, dk: int = 8, dv: int = 8,
+                             target: int = 16) -> list[ProfileCandidate]:
+    """Measured-profiler candidates for the rwkv6 family: jitted
+    ``chunked_scan`` (kernels/wkv6) dispatches along the halving chunk
+    search ``choose_chunk`` walks — target C first, then C/2, C/4, ... —
+    keeping only chunks whose working set fits the budget.  ``model_s``
+    comes from ``analysis.wkv6_stream_costs``."""
+    import functools
+
+    from repro import analysis
+    from repro.core import factorization as fz
+    from repro.kernels import wkv6 as wkv6_lib
+
+    budget = fz.DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    r = jax.random.normal(ks[0], (n_bh, seq_len, dk), jnp.float32)
+    k = jax.random.normal(ks[1], (n_bh, seq_len, dk), jnp.float32)
+    v = jax.random.normal(ks[2], (n_bh, seq_len, dv), jnp.float32)
+    logw = -jnp.exp(jax.random.normal(ks[3], (n_bh, seq_len, dk)))
+    u = jax.random.normal(ks[4], (n_bh, dk))
+    state = jax.random.normal(ks[5], (n_bh, dk, dv)) * 0.3
+
+    out: list[ProfileCandidate] = []
+    c = max(1, min(target, seq_len))
+    while len(out) < max_points:
+        if wkv6_lib.working_set_bytes(seq_len, dk, dv, c) <= budget:
+            fn = jax.jit(functools.partial(wkv6_lib.wkv6, chunk=c))
+            costs = analysis.wkv6_stream_costs(seq_len, n_bh, dk, dv, c)
+            out.append(ProfileCandidate(
+                "rwkv6", "chunked_scan", {"chunk": c},
+                fn, (r, k, v, logw, u, state),
+                model_s=max(costs["t_compute"], costs["t_memory"])))
+        if c == 1:
+            break
+        c //= 2
+    return out
+
+
 def _build_rwkv_family() -> Family:
     specs = {
         "stepwise": PlanSpec("stepwise", _rwkv_stepwise, _RWKV_EXACT),
@@ -431,7 +544,8 @@ def _build_rwkv_family() -> Family:
     return Family(
         name="rwkv6", oracle="stepwise", plans=specs, cases=_RWKV_CASES,
         dtypes=("float32", "bfloat16"), make_inputs=_rwkv_make_inputs,
-        apply=_rwkv_apply, grads=_rwkv_grads, viability=rwkv_viability)
+        apply=_rwkv_apply, grads=_rwkv_grads, viability=rwkv_viability,
+        profile_hook=_rwkv_profile_candidates)
 
 
 register_family(_build_lstm_family())

@@ -50,7 +50,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Protocol
+from typing import Callable, Mapping, Protocol
+
+from repro.obs import trace as trace_lib
 
 
 class LoadSensor(Protocol):
@@ -160,23 +162,50 @@ class Scheduler:
                 "predicate rejected every registered plan")
         return out
 
+    @staticmethod
+    def _blocked_call(plan: Plan, args, kwargs):
+        out = plan.fn(*args, **kwargs)
+        try:  # block on async results
+            import jax
+            out = jax.block_until_ready(out)
+        except Exception:
+            pass
+        return out
+
     def calibrate(self, *args, repeats: int = 3,
                   viable: Callable[[str], bool] | None = None,
+                  profile: Mapping[str, float] | None = None,
                   **kwargs) -> None:
-        """Time each viable plan on representative inputs to seed base
-        latencies; non-viable plans keep base_latency_s = inf."""
+        """Seed base latencies for each viable plan; non-viable plans keep
+        base_latency_s = inf.
+
+        A plan named in ``profile`` (plan name -> measured seconds, e.g.
+        ``obs.profile.DeviceProfile.best_latencies(...)``) is seeded from
+        the persisted measurement WITHOUT running — the measured-profiler
+        path that replaces cold analytic estimates.  Every other viable
+        plan is timed here: ONE untimed warmup call first (absorbing JIT
+        compile — without it ``repeats=1`` records compile time as the
+        base latency), then best-of-``repeats`` timed calls.
+        """
+        tracer = trace_lib.get_tracer()
         for plan in self._viable_plans(viable).values():
+            if profile is not None and plan.name in profile:
+                plan.base_latency_s = float(profile[plan.name])
+                if tracer.enabled:
+                    tracer.event("sched/calibrate", plan=plan.name,
+                                 latency_s=plan.base_latency_s,
+                                 source="profile")
+                continue
+            self._blocked_call(plan, args, kwargs)          # untimed warmup
             best = float("inf")
             for _ in range(repeats):
                 t0 = time.perf_counter()
-                out = plan.fn(*args, **kwargs)
-                try:  # block on async results
-                    import jax
-                    jax.block_until_ready(out)
-                except Exception:
-                    pass
+                self._blocked_call(plan, args, kwargs)
                 best = min(best, time.perf_counter() - t0)
             plan.base_latency_s = best
+            if tracer.enabled:
+                tracer.event("sched/calibrate", plan=plan.name,
+                             latency_s=best, source="measured")
 
     def choose(self, load: float | None = None,
                viable: Callable[[str], bool] | None = None) -> Decision:
@@ -186,17 +215,22 @@ class Scheduler:
         best = min(preds, key=preds.get)
         d = Decision(plan=best, load=load, predicted_s=preds)
         self.decisions.append(d)
+        tracer = trace_lib.get_tracer()
+        if tracer.enabled:
+            tracer.event("sched/choose", plan=best, load=load,
+                         predicted_s=preds[best], n_viable=len(preds))
         return d
 
     def run(self, *args, **kwargs):
         d = self.choose()
         plan = self.plans[d.plan]
-        t0 = time.perf_counter()
-        out = plan.fn(*args, **kwargs)
-        try:
-            import jax
-            out = jax.block_until_ready(out)
-        except Exception:
-            pass
-        plan.observe(time.perf_counter() - t0, d.load)
+        tracer = trace_lib.get_tracer()
+        span = (tracer.span("sched/run", plan=d.plan, load=d.load)
+                if tracer.enabled else trace_lib.NULL_SPAN)
+        with span:
+            t0 = time.perf_counter()
+            out = self._blocked_call(plan, args, kwargs)
+            latency = time.perf_counter() - t0
+            span.set(latency_s=latency)
+        plan.observe(latency, d.load)
         return out, d

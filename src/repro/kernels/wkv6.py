@@ -412,6 +412,11 @@ def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
     """
     BH, T, dk = r.shape
     chunk = max(1, min(chunk, T))
+    from repro.obs import trace as trace_lib
+    tracer = trace_lib.get_tracer()
+    if tracer.enabled:
+        tracer.event("plan/dispatch", family="rwkv6", plan="chunked_scan",
+                     chunk=chunk, bwd=bwd, n_bh=BH, seq_len=T)
     pad = (-T) % chunk
     if pad:
         def zpad(a):

@@ -1,0 +1,37 @@
+"""Runtime observability: structured tracing, serving metrics, profiler.
+
+Three layers, smallest dependency surface first:
+
+* ``obs.trace`` — span/event tracer with a ``NullSink`` default.  Hot
+  paths (the per-tick serving loop, plan dispatch) pay exactly one
+  ``tracer.enabled`` branch when tracing is off; when on, records stream
+  to JSONL for offline analysis.  No repro-internal imports.
+* ``obs.metrics`` — plain-Python counters / gauges / bounded histograms
+  for the serving path.  Never device allocations: the zero-allocation
+  serving invariant (StatePool.buffers_built == capacity) must hold with
+  metrics enabled, so everything here is host ints and deques.
+* ``obs.profile`` — measured kernel profiler: warmup-aware,
+  ``block_until_ready``-synced sweeps over each family's viable tiling
+  surface, persisted per device kind + VMEM budget, consumable by
+  ``Scheduler.calibrate(profile=...)``.  Imports core/plans lazily so
+  ``repro.obs`` stays importable without pulling in kernels.
+
+ROADMAP §Observability documents the event schema and profile key.
+"""
+from repro.obs.metrics import Counter, Gauge, Histogram, Metrics
+from repro.obs.trace import (
+    JsonlSink,
+    ListSink,
+    NullSink,
+    Tracer,
+    configure,
+    get_tracer,
+    read_jsonl,
+    set_tracer,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metrics",
+    "JsonlSink", "ListSink", "NullSink", "Tracer",
+    "configure", "get_tracer", "read_jsonl", "set_tracer",
+]

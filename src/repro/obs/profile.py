@@ -1,0 +1,200 @@
+"""Measured kernel profiler — the on-device half of MobiRNN's tuning loop.
+
+The paper's central claim is that tiling/plan choices must be tuned *per
+device, per load*; our ``choose_batch_block`` / ``choose_chunk`` tables
+are analytic.  This module closes the loop:
+
+* ``profile_families`` sweeps the viable tiling surface each family
+  publishes through ``Family.profile_hook`` (core/plans.py) — jitted
+  dispatches at concrete ``(block_b, time_chunk)`` / chunk points —
+  timing each with ``time_fn`` (untimed warmups absorb JIT compile,
+  ``block_until_ready`` syncs async dispatch, min-over-repeats rejects
+  scheduler noise).
+* The result persists as a ``DeviceProfile`` keyed on
+  ``platform:device_kind`` + the VMEM budget it was swept under — a
+  profile measured on one device class never silently seeds another.
+* ``Scheduler.calibrate(profile=DeviceProfile.best_latencies(...))``
+  seeds plan base latencies from the measurement instead of cold
+  analytic estimates (core/scheduler.py).
+* ``model_vs_measured`` joins each measured point against the analytic
+  roofline (``analysis.lstm_seq_stream_costs`` /
+  ``analysis.wkv6_stream_costs``) and emits a divergence ratio per
+  point, flagging those beyond a threshold — the validation step Rezk et
+  al.'s survey calls for.  NB: under interpret-mode Pallas on CPU the
+  ratio is uniformly huge (the model prices a TPU roofline); the ratio
+  is a *relative* diagnostic there, which is why the CI smoke asserts
+  finiteness, not magnitude.
+
+core/plans is imported lazily so ``repro.obs`` itself stays free of
+kernel imports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import time
+from typing import Any, Callable, Mapping
+
+
+def device_kind() -> str:
+    """Profile key half 1: ``platform:device_kind`` of the default device."""
+    import jax
+
+    d = jax.devices()[0]
+    return f"{d.platform}:{d.device_kind}"
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of-``repeats`` wall time of ``fn(*args)``, after ``warmup``
+    untimed calls (JIT compile + caches) and with ``block_until_ready``
+    inside the timed region — the same discipline benchmarks/run.py uses."""
+    import jax
+
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+@dataclasses.dataclass
+class ProfilePoint:
+    """One measured point on a family's viable tiling surface."""
+    family: str
+    plan: str
+    point: dict[str, Any]            # tiling coordinates, JSON-able
+    measured_s: float
+    model_s: float | None = None     # analytic roofline seconds, if modeled
+
+    @property
+    def ratio(self) -> float | None:
+        """measured / modeled — the divergence the report flags."""
+        if self.model_s is None or self.model_s <= 0:
+            return None
+        return self.measured_s / self.model_s
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "ProfilePoint":
+        return cls(**obj)
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    """A persisted sweep: every point measured on ONE device under ONE
+    VMEM budget.  ``key`` is the identity ``calibrate`` callers should
+    match before trusting the numbers."""
+    device_kind: str
+    vmem_budget: int
+    points: list[ProfilePoint]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def key(self) -> str:
+        return f"{self.device_kind}/vmem{self.vmem_budget}"
+
+    def families(self) -> list[str]:
+        return sorted({p.family for p in self.points})
+
+    def best_latencies(self, rename: Mapping[str, str] | None = None
+                       ) -> dict[str, float]:
+        """Per-plan best measured seconds — the mapping
+        ``Scheduler.calibrate(profile=...)`` consumes.  ``rename`` maps a
+        family plan name to the scheduler's registered name (e.g.
+        ``{"fused_seq": "accel_seq", "chunked_scan": "accel_wkv"}``)."""
+        out: dict[str, float] = {}
+        for p in self.points:
+            name = p.plan if rename is None else rename.get(p.plan, p.plan)
+            if name not in out or p.measured_s < out[name]:
+                out[name] = p.measured_s
+        return out
+
+    def to_json(self) -> dict:
+        return {"device_kind": self.device_kind,
+                "vmem_budget": self.vmem_budget,
+                "meta": self.meta,
+                "points": [p.to_json() for p in self.points]}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "DeviceProfile":
+        return cls(device_kind=obj["device_kind"],
+                   vmem_budget=int(obj["vmem_budget"]),
+                   points=[ProfilePoint.from_json(p) for p in obj["points"]],
+                   meta=obj.get("meta", {}))
+
+    def save(self, path: str) -> str:
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(self.to_json(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "DeviceProfile":
+        with open(path, "r", encoding="utf-8") as fh:
+            return cls.from_json(json.load(fh))
+
+
+def profile_families(families: tuple[str, ...] = ("lstm", "rwkv6"), *,
+                     vmem_budget: int | None = None, repeats: int = 2,
+                     warmup: int = 1, max_points: int = 4,
+                     hook_kwargs: Mapping[str, dict] | None = None
+                     ) -> DeviceProfile:
+    """Sweep each family's profile hook and measure every candidate.
+
+    ``hook_kwargs`` passes per-family shape overrides through to the hook
+    (e.g. ``{"lstm": {"seq_len": 16}}`` for a fast CI smoke).  Emits a
+    ``profile/point`` trace event per measurement when tracing is on.
+    """
+    from repro.core import factorization as fz
+    from repro.core import plans as plans_lib
+    from repro.obs import trace as trace_lib
+
+    budget = fz.DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    tr = trace_lib.get_tracer()
+    points: list[ProfilePoint] = []
+    for name in families:
+        fam = plans_lib.get_family(name)
+        if fam.profile_hook is None:
+            raise ValueError(f"family {name!r} registers no profile_hook")
+        kwargs = dict((hook_kwargs or {}).get(name, {}))
+        cands = fam.profile_hook(vmem_budget=budget, max_points=max_points,
+                                 **kwargs)
+        for c in cands:
+            measured = time_fn(c.fn, *c.args, repeats=repeats, warmup=warmup)
+            pt = ProfilePoint(c.family, c.plan, dict(c.point), measured,
+                              c.model_s)
+            points.append(pt)
+            if tr.enabled:
+                tr.event("profile/point", family=pt.family, plan=pt.plan,
+                         measured_s=pt.measured_s, model_s=pt.model_s,
+                         **pt.point)
+    return DeviceProfile(device_kind(), int(budget), points)
+
+
+def model_vs_measured(profile: DeviceProfile,
+                      threshold: float | None = None) -> list[dict]:
+    """One row per profiled point: measured, modeled, and their ratio.
+
+    ``threshold`` (>1) flags rows whose ratio falls outside
+    ``[1/threshold, threshold]`` as ``diverged`` — the policy knob ROADMAP
+    §Observability documents.  Rows without an analytic model carry
+    ``ratio=None`` and are never flagged.
+    """
+    if threshold is not None and threshold <= 1:
+        raise ValueError("threshold must be > 1 (a symmetric band)")
+    rows = []
+    for p in profile.points:
+        r = p.ratio
+        diverged = (threshold is not None and r is not None
+                    and not (1.0 / threshold <= r <= threshold))
+        rows.append({"family": p.family, "plan": p.plan, "point": p.point,
+                     "measured_s": p.measured_s, "model_s": p.model_s,
+                     "ratio": r, "finite": r is not None and math.isfinite(r),
+                     "diverged": diverged})
+    return rows

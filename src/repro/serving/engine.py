@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core.scheduler import Plan, Scheduler, SyntheticLoadSensor
 from repro.core.state import StatePool
+from repro.obs import trace as trace_lib
+from repro.obs.metrics import Metrics
 from repro.models.registry import Model
 from repro.partitioning import split
 from repro.serving.slots import (QueueFull, Request, RequestQueue, Result,
@@ -80,6 +82,12 @@ class _EngineBase:
         for name, fn in self._decode_plans(extra_plans or {}).items():
             self.scheduler.register(
                 Plan(name, jax.jit(fn, donate_argnums=(1,)), shared=True))
+
+        # serving metrics are ALWAYS on: obs.metrics instruments are plain
+        # host ints/deques, so they cannot violate the zero-allocation
+        # serving invariant (tests assert buffers_built stays at capacity
+        # with metrics enabled); tracing stays opt-in via obs.trace
+        self.metrics = Metrics()
 
     def _decode_plans(self, extra: dict[str, Callable]
                       ) -> dict[str, Callable]:
@@ -157,21 +165,30 @@ class Engine(_EngineBase):
         max_new = max(r.max_new_tokens for r in reqs)
         outs = []
         decisions = []
+        tracer = trace_lib.get_tracer()
+        wave_span = (tracer.span("serve/wave", n_reqs=len(reqs),
+                                 max_new=max_new, prefill_s=t_prefill)
+                     if tracer.enabled else trace_lib.NULL_SPAN)
         # prefill logits keep a singleton seq axis before the vocab dim
         tok = steps_lib.greedy_sample(logits)[..., 0]
         t0 = time.perf_counter()
-        for _ in range(max_new):
-            outs.append(np.asarray(tok))
-            d = self.scheduler.choose()
-            decisions.append(d.plan)
-            plan = self.scheduler.plans[d.plan]
-            t1 = time.perf_counter()
-            logits, cache = jax.block_until_ready(
-                plan.fn(self.params, cache, {"tokens": tok}))
-            plan.observe(time.perf_counter() - t1, d.load)
-            tok = steps_lib.greedy_sample(logits)
-        t_decode = time.perf_counter() - t0
+        with wave_span:
+            for _ in range(max_new):
+                outs.append(np.asarray(tok))
+                d = self.scheduler.choose()
+                decisions.append(d.plan)
+                plan = self.scheduler.plans[d.plan]
+                t1 = time.perf_counter()
+                logits, cache = jax.block_until_ready(
+                    plan.fn(self.params, cache, {"tokens": tok}))
+                plan.observe(time.perf_counter() - t1, d.load)
+                tok = steps_lib.greedy_sample(logits)
+            t_decode = time.perf_counter() - t0
+            wave_span.set(decode_s=t_decode)
         self.pool.give_back(cache)
+        self.metrics.counter("serving/waves").inc()
+        self.metrics.histogram("serving/wave_prefill_s").observe(t_prefill)
+        self.metrics.histogram("serving/wave_decode_s").observe(t_decode)
 
         # (B, [K,] max_new); toks[..., :0] covers an all-zero-budget wave
         gen = (np.stack(outs, axis=-1) if outs else toks[..., :0])
@@ -223,6 +240,15 @@ class SlotEngine(_EngineBase):
             c = jax.tree.map(lambda a: a * 0, c)
             logits, c = steps_lib.prefill_step(self.cfg, p, c, b)
             return steps_lib.greedy_sample(logits)[..., 0], c
+
+        # pre-create the serving instruments so metrics snapshots (and the
+        # end-of-stream serve/metrics trace event) always carry the full
+        # schema, zero-valued counters included
+        for name in ("serving/ticks", "serving/tokens", "serving/retired",
+                     "serving/deadline_miss"):
+            self.metrics.counter(name)
+        self.metrics.histogram("serving/ttft_s")
+        self.metrics.histogram("serving/tbt_s")
 
         self._prefill_sample = jax.jit(prefill_sample, donate_argnums=(1,))
         self.manager = SlotManager(
@@ -279,9 +305,18 @@ class SlotEngine(_EngineBase):
             self.params, self._scratch,
             self._prefill_batch(prompt.reshape((1,) + prompt.shape)))
         tok0 = tok0[0]                       # () or (K,), device array
-        self.manager.admit(index, req, self._scratch, tok0,
-                           time.perf_counter() - t0)
-        return TokenEvent(req.uid, np.asarray(tok0, np.int32), 0,
+        prefill_s = time.perf_counter() - t0
+        tok0_np = np.asarray(tok0, np.int32)  # blocks: token host-visible
+        ttft_s = time.perf_counter() - t0     # admit -> first token
+        self.manager.admit(index, req, self._scratch, tok0, prefill_s,
+                           ttft_s=ttft_s)
+        self.metrics.histogram("serving/ttft_s").observe(ttft_s)
+        tracer = trace_lib.get_tracer()
+        if tracer.enabled:
+            tracer.event("serve/admit", uid=req.uid, slot=index,
+                         prompt_len=int(prompt.shape[-1]),
+                         prefill_s=prefill_s, ttft_s=ttft_s)
+        return TokenEvent(req.uid, tok0_np, 0,
                           done=(req.max_new_tokens <= 1))
 
     def _expired_event(self, req: Request) -> TokenEvent:
@@ -301,6 +336,8 @@ class SlotEngine(_EngineBase):
             self._validate(req)          # fail fast, not mid-stream
         pending = collections.deque(requests or [])
         mgr = self.manager
+        metrics = self.metrics
+        tick = 0
         while pending or len(self.queue) or mgr.any_occupied:
             now = self.clock()
 
@@ -311,6 +348,7 @@ class SlotEngine(_EngineBase):
                 while pending and not self.queue.full:
                     self.queue.submit(pending.popleft())
                 for req in self.queue.expire(now):
+                    metrics.counter("serving/deadline_miss").inc()
                     self.finished[req.uid] = Result(
                         req.uid, mgr.empty_tokens(), 0.0, 0.0, [],
                         finish_reason="deadline")
@@ -320,6 +358,8 @@ class SlotEngine(_EngineBase):
             # resident lanes past their deadline retire with what they have
             for idx in mgr.expired_indices(now):
                 res = mgr.retire(idx, finish_reason="deadline")
+                metrics.counter("serving/deadline_miss").inc()
+                metrics.counter("serving/retired").inc()
                 self.finished[res.uid] = res
                 yield TokenEvent(res.uid, None, res.tokens.shape[-1],
                                  done=True, finish_reason="deadline")
@@ -341,34 +381,63 @@ class SlotEngine(_EngineBase):
                 yield ev
                 if ev.done:
                     res = mgr.retire(idx)
+                    metrics.counter("serving/retired").inc()
                     self.finished[res.uid] = res
+
+            queue_depth = len(self.queue)
+            occupied = sum(1 for s in mgr.slots if s.occupied)
+            metrics.gauge("serving/queue_depth").set(float(queue_depth))
+            metrics.gauge("serving/occupancy").set(occupied / mgr.n_slots)
 
             if not mgr.active_mask().any():
                 if pending or len(self.queue):
                     continue   # only expiries/zero-token admissions left
                 break
 
-            # ONE fused masked decode tick across all lanes
-            d = self.scheduler.choose()
-            plan = self.scheduler.plans[d.plan]
-            t0 = time.perf_counter()
-            sampled_dev, mgr.cache = plan.fn(self.params, mgr.cache,
-                                             mgr.tick_batch())
-            mgr.set_sampled(sampled_dev)
-            sampled = np.asarray(sampled_dev)   # blocks; one copy per tick
-            plan.observe(time.perf_counter() - t0, d.load)
+            # ONE fused masked decode tick across all lanes — the span
+            # wraps choose + dispatch + host copy, so the per-tick
+            # sched/choose event nests under serve/tick in the trace
+            tracer = trace_lib.get_tracer()
+            span = (tracer.span("serve/tick", tick=tick,
+                                queue_depth=queue_depth, occupied=occupied)
+                    if tracer.enabled else trace_lib.NULL_SPAN)
+            with span:
+                d = self.scheduler.choose()
+                plan = self.scheduler.plans[d.plan]
+                t0 = time.perf_counter()
+                sampled_dev, mgr.cache = plan.fn(self.params, mgr.cache,
+                                                 mgr.tick_batch())
+                mgr.set_sampled(sampled_dev)
+                sampled = np.asarray(sampled_dev)  # blocks; 1 copy per tick
+                tick_s = time.perf_counter() - t0
+                plan.observe(tick_s, d.load)
+                span.set(plan=d.plan, load=d.load, tick_s=tick_s)
+            metrics.counter("serving/ticks").inc()
+            tick += 1
 
             just_active = [s.index for s in mgr.slots
                            if s.occupied and s.remaining > 0]
             done_idx = set(mgr.record(sampled, d.plan))
+            metrics.counter("serving/tokens").inc(len(just_active))
+            token_t = time.perf_counter()
+            tbt = metrics.histogram("serving/tbt_s")
             for idx in just_active:
                 s = mgr.slots[idx]
+                tbt.observe(token_t - s.last_token_t)
+                s.last_token_t = token_t
                 yield TokenEvent(s.request.uid, np.asarray(sampled[idx],
                                                            np.int32),
                                  len(s.tokens) - 1, done=idx in done_idx)
             for idx in done_idx:
                 res = mgr.retire(idx)
+                metrics.counter("serving/retired").inc()
                 self.finished[res.uid] = res
+
+        # one summary record per drained stream: every counter (including
+        # zero-valued deadline_miss), gauge and histogram summary
+        tracer = trace_lib.get_tracer()
+        if tracer.enabled:
+            tracer.event("serve/metrics", **metrics.snapshot())
 
     def take_finished(self) -> dict[int, Result]:
         """Pop and return every completed Result (uid -> Result).  The

@@ -68,6 +68,10 @@ class Result:
     decode_s: float
     plan_decisions: list[str]
     finish_reason: str = "length"    # 'length' | 'deadline'
+    #: admission -> first sampled token available on host, seconds.
+    #: 0.0 for requests that never reached a lane (queue expiry,
+    #: zero-token budgets) — mirrors prefill_s there.
+    ttft_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -132,6 +136,8 @@ class Slot:
     tokens: list = dataclasses.field(default_factory=list)
     prefill_s: float = 0.0
     admitted_t: float = 0.0
+    ttft_s: float = 0.0              # admit -> first token, host-visible
+    last_token_t: float = 0.0        # perf_counter of the latest token (TBT)
     plan_decisions: list = dataclasses.field(default_factory=list)
 
     @property
@@ -196,13 +202,17 @@ class SlotManager:
 
     # -- lane lifecycle -------------------------------------------------
     def admit(self, index: int, req: Request, lane_cache: Any,
-              first_token: Any, prefill_s: float) -> Slot:
+              first_token: Any, prefill_s: float,
+              ttft_s: float | None = None) -> Slot:
         """Left-pack a freshly prefilled request into a free lane.
 
         ``lane_cache`` is the B=1 scratch cache holding the prompt's state
         (scalar ``pos`` = prompt length); its single lane is scattered into
         lane ``index`` through the donated admit jit, together with the
-        prompt's first sampled token (``first_token``, device array)."""
+        prompt's first sampled token (``first_token``, device array).
+        ``ttft_s`` is the admit->first-token wall time the engine measured
+        (the first token IS produced at admission); defaults to
+        ``prefill_s`` for callers that do not separate the two."""
         s = self.slots[index]
         assert not s.occupied, index
         self.cache, self.tokens, self.active = self._admit(
@@ -213,6 +223,8 @@ class SlotManager:
         s.remaining = req.max_new_tokens - 1
         s.prefill_s = prefill_s
         s.admitted_t = time.perf_counter()
+        s.ttft_s = prefill_s if ttft_s is None else ttft_s
+        s.last_token_t = s.admitted_t
         s.plan_decisions = []
         return s
 
@@ -228,7 +240,7 @@ class SlotManager:
         res = Result(uid=s.request.uid, tokens=toks, prefill_s=s.prefill_s,
                      decode_s=time.perf_counter() - s.admitted_t,
                      plan_decisions=s.plan_decisions,
-                     finish_reason=finish_reason)
+                     finish_reason=finish_reason, ttft_s=s.ttft_s)
         self.slots[index] = Slot(index)
         return res
 

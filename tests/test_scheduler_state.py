@@ -66,8 +66,46 @@ def test_viability_never_calibrates_nonviable():
     s.register(Plan("accel", lambda: calls.append("accel"), shared=True))
     s.register(Plan("cpu", lambda: calls.append("cpu"), shared=False))
     s.calibrate(repeats=1)
-    assert calls == ["cpu"]
+    # one untimed warmup + one timed repeat, the non-viable plan never runs
+    assert calls == ["cpu", "cpu"]
     assert s.plans["accel"].base_latency_s == float("inf")
+
+
+def test_calibrate_warmup_excludes_compile_cost():
+    """Regression: calibrate used to time the FIRST call, so jit compile
+    cost landed in base_latency_s and poisoned every choose() afterwards.
+    A fn that is slow exactly once (compile) must calibrate to its
+    steady-state latency."""
+    import time as _time
+
+    calls = []
+
+    def fn():
+        calls.append(1)
+        if len(calls) == 1:
+            _time.sleep(0.05)        # "compilation" on first invocation
+
+    s = Scheduler(SyntheticLoadSensor(0.0))
+    s.register(Plan("p", fn))
+    s.calibrate(repeats=1)
+    assert len(calls) == 2           # warmup + one timed repeat
+    # the timed repeat must not see the 50ms first-call cost
+    assert s.plans["p"].base_latency_s < 0.025
+
+
+def test_calibrate_seeds_from_profile_without_running():
+    """A persisted device profile short-circuits measurement: profiled
+    plans take their base latency from the profile and their fn is never
+    invoked; unprofiled plans still get the measured path."""
+    ran = []
+    s = Scheduler(SyntheticLoadSensor(0.0))
+    s.register(Plan("profiled", lambda: ran.append("profiled")))
+    s.register(Plan("measured", lambda: ran.append("measured")))
+    s.calibrate(repeats=1, profile={"profiled": 0.007})
+    assert s.plans["profiled"].base_latency_s == 0.007
+    assert "profiled" not in ran
+    assert ran == ["measured", "measured"]      # warmup + timed
+    assert s.plans["measured"].base_latency_s < float("inf")
 
 
 def test_viability_rejecting_everything_raises():

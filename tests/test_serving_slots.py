@@ -137,6 +137,73 @@ def test_slot_engine_no_alloc_after_warmup(tiny):
     # returned/rebuilt
     assert engine.pool.stats.checkouts == 1
     assert engine._scratch_pool.stats.checkouts == 1
+    # the always-on serving metrics are host-side ints/deques — populating
+    # them across two serves must not have touched the device pools above
+    assert engine.metrics.counter("serving/ticks").value > 0
+    assert engine.metrics.histogram("serving/ttft_s").count == 6
+
+
+def test_slot_engine_traced_run_token_identical(tiny):
+    """Tracing on vs off must not change a single token or allocate on
+    the serving path, and the trace must carry per-tick spans with the
+    chosen plan, TTFT admit events, and nested sched/choose decisions."""
+    from repro.obs import ListSink, Tracer, set_tracer
+
+    cfg, model, params = tiny
+    reqs = lambda: _requests(cfg, [4, 6, 3], [3, 2, 4])
+    base = SlotEngine(model, params, n_slots=2, max_seq=64)
+    want = [r.tokens for r in base.serve(reqs())]
+
+    sink = ListSink()
+    old = set_tracer(Tracer(sink))
+    try:
+        traced = SlotEngine(model, params, n_slots=2, max_seq=64)
+        got = [r.tokens for r in traced.serve(reqs())]
+    finally:
+        set_tracer(old)
+
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    assert traced.pool.stats.buffers_built == 1       # zero-alloc holds
+
+    ticks = [r for r in sink.records if r["name"] == "serve/tick"]
+    admits = [r for r in sink.records if r["name"] == "serve/admit"]
+    chooses = [r for r in sink.records if r["name"] == "sched/choose"]
+    assert ticks and len(admits) == 3
+    tick_ids = {r["span"] for r in ticks}
+    for t in ticks:
+        assert t["type"] == "span" and t["attrs"]["plan"]
+        assert t["attrs"]["tick_s"] > 0
+    for a in admits:
+        assert a["attrs"]["ttft_s"] > 0
+    # every per-tick plan decision nests under its tick span
+    assert chooses and all(c["parent"] in tick_ids for c in chooses)
+    # the run closes with a metrics summary event
+    summaries = [r for r in sink.records if r["name"] == "serve/metrics"]
+    assert summaries
+    snap = summaries[-1]["attrs"]
+    assert snap["counters"]["serving/deadline_miss"] == 0
+    assert snap["counters"]["serving/retired"] == 3
+    assert snap["histograms"]["serving/ttft_s"]["count"] == 3
+
+
+def test_slot_engine_ttft_on_results(tiny):
+    """Satellite: per-request TTFT (admit -> first token on host) rides on
+    Result next to decode_s, and feeds the serving/ttft_s histogram."""
+    cfg, model, params = tiny
+    engine = SlotEngine(model, params, n_slots=2, max_seq=64)
+    results = engine.serve(_requests(cfg, [4, 7, 3], [3, 2, 4]))
+    for r in results:
+        assert r.finish_reason == "length"
+        assert r.ttft_s > 0.0
+        # the first token is produced AT admission, before any decode tick
+        assert r.ttft_s <= r.prefill_s + r.decode_s + 1.0
+    h = engine.metrics.histogram("serving/ttft_s")
+    assert h.count == len(results)
+    assert engine.metrics.histogram("serving/tbt_s").count > 0
+    assert engine.metrics.counter("serving/retired").value == len(results)
+    # zero-alloc invariant holds with metrics populated
+    assert engine.pool.stats.buffers_built == 1
 
 
 def test_slot_engine_backpressure(tiny):
