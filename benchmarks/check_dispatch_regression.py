@@ -4,20 +4,20 @@ MobiRNN's whole thesis is that dispatch count is the enemy on constrained
 accelerators, so it is the one benchmark quantity that must NEVER regress
 silently.  This checker diffs the ``dispatch``/``train_dispatch`` rows of a
 fresh ``benchmarks/run.py --json`` output against a committed baseline
-(e.g. BENCH_PR6.json) and exits non-zero on ANY increase — a fused plan
+(e.g. BENCH_PR8.json) and exits non-zero on ANY increase — a fused plan
 quietly falling back to the per-cell kernel or the oracle VJP shows up here
 as a count jump (1 -> T*L, 2 -> T*L), long before wall-clock noise would.
-The rwkv/* rows extend the guard to the second plan family: pallas_call
-counts (1 fwd / 2 train at any T) AND grid-step totals (BH*ceil(T/C) —
-``count_pallas_grid_steps`` — so a silently shrunken chunk or an
-oracle-replay backward both trip it).
+The rwkv/* and mamba/* rows extend the guard past the LSTM family:
+pallas_call counts (1 fwd / 2 train at any T) AND grid-step totals
+(BH*ceil(T/C) resp. ceil(B/bm)*ceil(T/C) — ``count_pallas_grid_steps`` —
+so a silently shrunken chunk or an oracle-replay backward both trip it).
 
 Usage:
     python benchmarks/check_dispatch_regression.py NEW.json BASELINE.json
 
 Rows are matched by name; only rows whose name contains ``dispatch`` are
 compared (their ``us_per_call`` field IS the pallas_call / grid-step count
-— see benchmarks/run.py fig2/quant/rwkv rows).  Rows present only in NEW (new
+— see benchmarks/run.py fig2/quant/rwkv/mamba rows).  Rows present only in NEW (new
 coverage, e.g. quant_* rows against an older baseline) pass with a note;
 baseline dispatch rows MISSING from NEW fail — dropped coverage is how a
 regression hides.

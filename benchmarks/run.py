@@ -448,9 +448,15 @@ def bench_rwkv_smoke() -> None:
     Asserts (a) the chunked_scan plan agrees with the stepwise oracle —
     values AND gradients — at a dividing and a NON-dividing T, (b) its
     dispatch counts match the PlanSpec (1 fwd / 2 train: no silent
-    oracle-replay backward), and (c) the chunk table is viable at the
-    mobile-class budget and halves rather than vanishing under pressure.
+    oracle-replay backward), (c) the chunk table is viable at the
+    mobile-class budget and halves rather than vanishing under pressure,
+    and (d) the double-buffered streamed windows are exact: a bh-tiled
+    run (bh_tile > 1, non-dividing BH tail included) is bit-identical to
+    the bh_tile=1 sweep, and the joint (chunk, bh_tile) table picks a
+    real point at the mobile-class budget.
     """
+    import functools
+
     import numpy as np
 
     from repro.analysis import count_kernel_dispatches, count_train_dispatches
@@ -500,6 +506,140 @@ def bench_rwkv_smoke() -> None:
     assert tight.chunk < full.chunk, (full, tight)   # halves, not vanishes
     row("rwkv_smoke/chunked_scan", float(full.chunk),
         f"fwd_dispatches=1,train_dispatches=2,chunk={full.chunk},"
+        f"budget={STREAM_BUDGET}")
+
+    # (d) streamed windows: bh-tiled sweep (non-dividing BH=B*H=3, tail
+    # row masked against the shared f32 state scratch) is bit-identical
+    # to the bh_tile=1 sweep of the same jitted kernel
+    case = plans.Case("smoke_bh", (1, 23, 3, 8, 8, 8))    # BH=3, T=23
+    (args, chunk) = fam.make_inputs(case, "float32")
+    run = jax.jit(functools.partial(
+        plans.RWKV_PLANS["chunked_scan"], chunk=chunk),
+        static_argnames=("bh_tile",))
+    base_out, base_s = run(*args, bh_tile=1)
+    for bt in (2, 3):
+        out, s = run(*args, bh_tile=bt)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base_out))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(base_s))
+    joint = wkv6_lib.choose_blocks(8, 2048, 64, 64, target=32,
+                                   vmem_budget=STREAM_BUDGET)
+    assert joint is not None and joint.bh_tile >= 1
+    row("rwkv_smoke/streamed_windows", float(joint.bh_tile),
+        f"bitwise_bh_tiles=(1,2,3),BH=3,T=23,joint={tuple(joint)},"
+        f"budget={STREAM_BUDGET}")
+
+
+def bench_mamba_rows() -> None:
+    """mamba/* rows: the mamba family's fused_scan plan holds its
+    registered dispatch contract on the fig2 T sweep — 1 forward / 2
+    train Pallas dispatches at every T (the names contain "dispatch", so
+    the regression guard fails CI on any silent scan-oracle fallback),
+    plus the O(T/C) grid-step rows and the (block_b, chunk) the VMEM
+    table picks at the mobile-class budget."""
+    import math
+
+    from repro.analysis import (count_kernel_dispatches,
+                                count_pallas_grid_steps,
+                                count_train_dispatches)
+    from repro.core import plans
+    from repro.kernels import mamba_scan as ms_lib
+
+    B, di, ds, chunk, bm = 2, 8, 4, 32, 2
+    fam = plans.get_family("mamba")
+    for T in (128, 512, 2048):
+        case = plans.Case(f"bench_T{T}", (B, T, di, ds, chunk, bm))
+        args, _, _ = fam.make_inputs(case, "float32")
+        jx = jax.make_jaxpr(
+            lambda *a: plans.MAMBA_PLANS["fused_scan"](
+                *a, chunk=chunk, block_b=bm))(*args)
+        n_fwd = count_kernel_dispatches(jx)
+        steps = count_pallas_grid_steps(jx)
+
+        def loss(*a):
+            y, h = plans.MAMBA_PLANS["fused_scan"](*a, chunk=chunk,
+                                                   block_b=bm)
+            return jnp.sum(y) + jnp.sum(h)
+
+        n_train = count_train_dispatches(loss, *args)
+        jx2 = jax.make_jaxpr(jax.value_and_grad(loss, argnums=(0,)))(*args)
+        t_steps = count_pallas_grid_steps(jx2)
+        want = math.ceil(B / bm) * math.ceil(T / chunk)
+        row(f"mamba/dispatch_fused_scan_T{T}", float(n_fwd),
+            f"pallas_calls={n_fwd} (O(1) in T)")
+        row(f"mamba/train_dispatch_fused_scan_T{T}", float(n_train),
+            f"pallas_calls={n_train} (1 traj fwd + 1 reverse sweep)")
+        row(f"mamba/grid_dispatch_steps_T{T}", float(steps),
+            f"grid_steps={steps} (ceil(B/bm)*ceil(T/C)={want})")
+        row(f"mamba/train_grid_dispatch_steps_T{T}", float(t_steps),
+            f"grid_steps={t_steps} (2x fwd)")
+        for mode in ("fwd", "bwd"):
+            blocks = ms_lib.choose_blocks(
+                B, T, di, ds, vmem_budget=STREAM_BUDGET, mode=mode)
+            row(f"mamba/blocks_{mode}_T{T}",
+                float(blocks.chunk if blocks else 0),
+                f"chosen={tuple(blocks) if blocks else None}"
+                f",budget={STREAM_BUDGET}")
+
+
+def bench_mamba_smoke() -> None:
+    """CI smoke (fast job): the mamba registry acceptance, executed.
+
+    Asserts (a) the fused_scan plan agrees with the lax.scan oracle —
+    values AND gradients — at a dividing and a NON-dividing T (identity
+    zero-pad) and a non-dividing batch tile, (b) its dispatch counts
+    match the PlanSpec (1 fwd / 2 train: no silent scan-replay
+    backward), and (c) the joint (block_b, chunk) table is viable at the
+    mobile-class budget and refines rather than vanishing under pressure.
+    """
+    import numpy as np
+
+    from repro.analysis import count_kernel_dispatches, count_train_dispatches
+    from repro.core import plans
+    from repro.kernels import mamba_scan as ms_lib
+
+    fam = plans.get_family("mamba")
+    spec = fam.plans["fused_scan"]
+    for label, (B, T, bm) in (("div", (2, 64, 2)), ("nondiv", (3, 61, 2))):
+        case = plans.Case(f"smoke_{label}", (B, T, 8, 4, 16, bm))
+        inputs = fam.make_inputs(case, "float32")
+        got = fam.apply("fused_scan", inputs)
+        want = fam.apply(fam.oracle, inputs)
+        for a, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(w),
+                                       **fam.tol("fused_scan", "float32"))
+        gg = fam.grads("fused_scan", inputs)
+        gw = fam.grads(fam.oracle, inputs)
+        for a, w in zip(jax.tree.leaves(gg), jax.tree.leaves(gw)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(w),
+                **fam.grad_tol("fused_scan", "float32"))
+        (args, chunk, block_b) = inputs
+        n_fwd = count_kernel_dispatches(jax.make_jaxpr(
+            lambda *a: plans.MAMBA_PLANS["fused_scan"](
+                *a, chunk=chunk, block_b=block_b))(*args))
+
+        def loss(*a):
+            y, h = plans.MAMBA_PLANS["fused_scan"](*a, chunk=chunk,
+                                                   block_b=block_b)
+            return jnp.sum(y) + jnp.sum(h)
+
+        n_train = count_train_dispatches(loss, *args)
+        assert n_fwd == spec.fwd_dispatches, \
+            f"mamba forward fell back at T={T}: {n_fwd} dispatches"
+        assert n_train == spec.train_dispatches, \
+            f"mamba backward fell back at T={T}: {n_train} dispatches"
+
+    assert plans.mamba_viability(4, 2048, 64, 16,
+                                 vmem_budget=STREAM_BUDGET)("fused_scan")
+    full = ms_lib.choose_blocks(4, 2048, 64, 16,
+                                vmem_budget=STREAM_BUDGET)
+    assert full is not None
+    ws = ms_lib.working_set_bytes(2048, 64, 16, full.block_b, full.chunk)
+    tight = ms_lib.choose_blocks(4, 2048, 64, 16, vmem_budget=ws - 1)
+    assert tight is not None
+    assert tuple(tight) != tuple(full), (full, tight)  # refines, not gone
+    row("mamba_smoke/fused_scan", float(full.chunk),
+        f"fwd_dispatches=1,train_dispatches=2,blocks={tuple(full)},"
         f"budget={STREAM_BUDGET}")
 
 
@@ -699,7 +839,9 @@ def bench_obs_smoke(trace_path: str = "BENCH_ci_obs_trace.jsonl",
     nested sched/choose decisions, and the end-of-stream metrics summary
     (queue depth gauge, deadline-miss counter); (b) tracing changes NO
     tokens and keeps the zero-allocation invariant; (c) the measured
-    profiler sweeps >= 2 viable tiling points for BOTH families, the
+    profiler sweeps >= 2 viable tiling points for ALL THREE registered
+    families (lstm's (block_b, time_chunk) surface, rwkv6's widened
+    (bh_tile, chunk) surface, mamba's (block_b, chunk) surface), the
     profile round-trips through save/load, ``Scheduler.calibrate`` seeds
     base latencies from it, and the model-vs-measured report carries a
     finite ratio per point.  The trace and profile files are uploaded as
@@ -762,15 +904,22 @@ def bench_obs_smoke(trace_path: str = "BENCH_ci_obs_trace.jsonl",
     row("obs_smoke/trace", float(len(events)),
         f"ticks={len(ticks)},admits={len(admits)},file={trace_path}")
 
-    # --- measured profiler: both families, save/load, calibrate seed ----
+    # --- measured profiler: all three families, save/load, calibrate ----
     prof = profile_lib.profile_families(
-        ("lstm", "rwkv6"), vmem_budget=STREAM_BUDGET, repeats=1, warmup=1,
-        max_points=2,
+        ("lstm", "rwkv6", "mamba"), vmem_budget=STREAM_BUDGET, repeats=1,
+        warmup=1, max_points=2,
         hook_kwargs={"lstm": {"batch": 2, "seq_len": 16},
-                     "rwkv6": {"seq_len": 32, "n_bh": 2, "target": 8}})
-    for fam in ("lstm", "rwkv6"):
+                     "rwkv6": {"seq_len": 32, "n_bh": 2, "target": 8},
+                     "mamba": {"batch": 2, "seq_len": 16, "d_inner": 8,
+                               "d_state": 4}})
+    for fam in ("lstm", "rwkv6", "mamba"):
         n = sum(p.family == fam for p in prof.points)
         assert n >= 2, f"profiler swept {n} < 2 points for {fam}"
+    # the widened rwkv6 surface exposes the bh-tile axis, not just chunk
+    rwkv_tiles = {p.point.get("bh_tile") for p in prof.points
+                  if p.family == "rwkv6"}
+    assert len(rwkv_tiles) >= 2, \
+        f"rwkv6 profile points collapsed to one bh_tile: {rwkv_tiles}"
     prof.save(profile_path)
     prof2 = profile_lib.DeviceProfile.load(profile_path)
     assert prof2.to_json() == prof.to_json(), "profile did not round-trip"
@@ -778,6 +927,7 @@ def bench_obs_smoke(trace_path: str = "BENCH_ci_obs_trace.jsonl",
     sched = Scheduler(SyntheticLoadSensor(0.0))
     sched.register(Plan("fused_seq", lambda: None))
     sched.register(Plan("chunked_scan", lambda: None))
+    sched.register(Plan("fused_scan", lambda: None))
     sched.calibrate(profile=prof2.best_latencies())
     assert all(np.isfinite(p.base_latency_s)
                for p in sched.plans.values()), "profile seeding failed"
@@ -787,7 +937,7 @@ def bench_obs_smoke(trace_path: str = "BENCH_ci_obs_trace.jsonl",
         r["finite"] for r in report), "non-finite model-vs-measured ratio"
     worst = max(r["ratio"] for r in report)
     row("obs_smoke/profile", float(len(prof.points)),
-        f"families=2,key={prof.key},max_ratio={worst:.3g},"
+        f"families=3,key={prof.key},max_ratio={worst:.3g},"
         f"file={profile_path}")
 
 
@@ -905,6 +1055,14 @@ def main() -> None:
                          "T — plus the 1 fwd / 2 train dispatch contract "
                          "and chunk-table viability at the mobile budget; "
                          "the CI fast-job invocation)")
+    ap.add_argument("--mamba-smoke", action="store_true",
+                    help="run only the mamba fused-scan smoke (asserts "
+                         "registry equivalence vs the lax.scan oracle — "
+                         "values and gradients, dividing and non-dividing "
+                         "T and batch tile — plus the 1 fwd / 2 train "
+                         "dispatch contract and (block_b, chunk) table "
+                         "viability at the mobile budget; the CI fast-job "
+                         "invocation)")
     ap.add_argument("--obs-smoke", action="store_true",
                     help="run only the observability smoke (traced serving "
                          "run: per-tick spans, TTFT, token identity, "
@@ -920,7 +1078,7 @@ def main() -> None:
                          "ROADMAP §Observability) to PATH")
     ap.add_argument("--fig2", action="store_true",
                     help="run only the fig2 dispatch-count rows + the "
-                         "quant/* and rwkv/* rows (the CI "
+                         "quant/*, rwkv/* and mamba/* rows (the CI "
                          "dispatch-regression guard input — see "
                          "benchmarks/check_dispatch_regression.py)")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -944,12 +1102,15 @@ def main() -> None:
         bench_quant_smoke()
     elif args.rwkv_smoke:
         bench_rwkv_smoke()
+    elif args.mamba_smoke:
+        bench_mamba_smoke()
     elif args.obs_smoke:
         bench_obs_smoke()
     elif args.fig2:
         bench_fig2_dispatch_counts()
         bench_quant_rows()
         bench_rwkv_rows()
+        bench_mamba_rows()
     else:
         bench_fig2_dispatch_counts()
         bench_quant_rows()

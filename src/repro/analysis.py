@@ -201,44 +201,114 @@ def lstm_seq_stream_costs(seq_len: int, n_layers: int, p_width: int,
 
 def wkv6_stream_costs(seq_len: int, n_bh: int, dk: int, dv: int,
                       chunk: int, dtype_bytes: int = 4,
-                      mode: str = "fwd") -> dict[str, float]:
+                      mode: str = "fwd", *,
+                      bh_tile: int = 1) -> dict[str, float]:
     """Roofline terms for ONE chunked-scan WKV6 dispatch — the rwkv6
     analogue of ``lstm_seq_stream_costs``, priced from the kernels/wkv6
-    grid: per (batch-head, chunk) step the four (C, dk/dv) input tiles
-    stream HBM->VMEM once and the output tile streams back, while the
-    (dk, dv) recurrent state stays in VMEM scratch for the whole sweep —
-    that residency is the point of the kernel.
+    streamed grid: per (bh-tile, chunk) step the four (bh_tile, C, dk/dv)
+    input windows cross HBM->VMEM by explicit double-buffered DMA and the
+    output tile streams back, while the (bh_tile, dk, dv) recurrent state
+    stays in VMEM scratch for the whole time sweep — that residency is
+    the point of the kernel.  Only the two in-flight window slots are
+    resident; the traffic side prices every window at its FULL padded
+    extent (``tiling.streamed_axis_rows`` / ``tiling.pad_tiles``): a
+    non-dividing T or BH moves its identity zero-padding too, so the
+    model stays honest about tail re-reads.
 
-    FLOPs per chunk are the three MXU matmuls of ``_chunk_math`` (carry
-    term, intra-chunk scores, score application) plus the state update:
-    ``2*C*C*dk + 2*C*C*dv + 4*C*dk*dv``.  ``mode="bwd"`` sizes the
-    reverse-sweep dispatch: the linearised chunk recompute roughly
-    triples compute, and the stored state trajectory plus the mirrored
-    cotangent tiles stream on top of the forward traffic.
+    FLOPs per chunk per batch-head row are the three MXU matmuls of
+    ``_chunk_math`` (carry term, intra-chunk scores, score application)
+    plus the state update: ``2*C*C*dk + 2*C*C*dv + 4*C*dk*dv``, counted
+    over the padded grid (padded rows compute too).  ``mode="bwd"`` sizes
+    the reverse-sweep dispatch: the linearised chunk recompute roughly
+    triples compute, and the stored per-chunk state trajectory plus the
+    mirrored cotangent windows stream on top of the forward traffic.
 
     Returns the same keys as ``lstm_seq_stream_costs`` (``flops``,
     ``hbm_bytes``, ``vmem_resident_bytes``, ``t_compute``, ``t_memory``)
-    so obs/profile.py's model-vs-measured report can join either family.
+    so obs/profile.py's model-vs-measured report can join any family.
     """
+    from repro.core import tiling
     from repro.kernels import wkv6 as wkv6_lib
 
-    if mode not in ("fwd", "bwd"):
-        raise ValueError(f"mode must be 'fwd' or 'bwd', got {mode!r}")
+    tiling.check_mode(mode)
     C = max(1, min(chunk, seq_len))
-    nc = math.ceil(seq_len / C)
+    bt = max(1, min(bh_tile, n_bh))
+    nc = tiling.ceil_chunks(seq_len, C)
+    rows = tiling.pad_tiles(n_bh, bt)        # padded batch-head extent
+    t_rows = tiling.streamed_axis_rows(seq_len, C)       # nc * C
     per_chunk_flops = 2 * C * C * dk + 2 * C * C * dv + 4 * C * dk * dv
-    tiles_in = (3 * C * dk + C * dv) * dtype_bytes       # r, k, logw, v
-    out_tile = C * dv * dtype_bytes
-    per_chunk_bytes = tiles_in + out_tile
-    state_io = n_bh * (2 * dk * dv * 4 + dk * 4)         # s0 + s_out + u
-    flops = n_bh * nc * per_chunk_flops
-    hbm_bytes = n_bh * nc * per_chunk_bytes + state_io
+    windows_in = rows * t_rows * (3 * dk + dv) * dtype_bytes  # r,k,logw,v
+    out_tiles = rows * t_rows * dv * dtype_bytes
+    state_io = rows * (2 * dk * dv * 4 + dk * 4)         # s0 + s_out + u
+    flops = rows * nc * per_chunk_flops
+    hbm_bytes = windows_in + out_tiles + state_io
     if mode == "bwd":
         flops *= 3                      # linearised recompute + cot flow
-        # stored per-chunk state trajectory in, dout in, dr/dk/dv/dlogw out
-        hbm_bytes += n_bh * nc * (dk * dv * 4 + out_tile + tiles_in)
+        # stored per-chunk state trajectory windows in, dout windows in,
+        # dr/dk/dv/dlogw windows out, du/ds0 out once per row
+        hbm_bytes += (rows * nc * dk * dv * 4
+                      + out_tiles + windows_in
+                      + rows * (dk * 4 + dk * dv * 4))
     resident = wkv6_lib.working_set_bytes(seq_len, dk, dv, C, dtype_bytes,
-                                          mode=mode)
+                                          mode=mode, bh_tile=bt)
+    return {
+        "flops": float(flops),
+        "hbm_bytes": float(hbm_bytes),
+        "vmem_resident_bytes": float(resident),
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": hbm_bytes / HBM_BW,
+    }
+
+
+def mamba_scan_stream_costs(seq_len: int, batch: int, d_inner: int,
+                            d_state: int, block_b: int, chunk: int,
+                            dtype_bytes: int = 4,
+                            mode: str = "fwd") -> dict[str, float]:
+    """Roofline terms for ONE fused selective-scan dispatch — the mamba
+    analogue of ``wkv6_stream_costs``, priced from the kernels/mamba_scan
+    (batch-tile, time-chunk) grid: per step the (bm, C, d_inner/d_state)
+    input tiles for x, dt, B and C stream HBM->VMEM and the output tile
+    streams back, while the (bm, d_inner, d_state) f32 state stays in
+    VMEM scratch across the time sweep.  Padded extents are priced in
+    full (``tiling.pad_tiles`` / ``tiling.streamed_axis_rows``) — the
+    identity zero-pad (dt=0) moves across HBM like real rows.
+
+    Per step per row the recurrence costs ~``8 * d_inner * d_state``
+    FLOPs (decay exp + multiply, outer-product injection, contraction
+    with C).  ``mode="bwd"`` sizes the reverse-sweep dispatch: the
+    linearised per-chunk recompute roughly triples compute, and the
+    stored state trajectory plus mirrored cotangent tiles stream on top.
+
+    Returns the same keys as the other ``*_stream_costs`` so
+    obs/profile.py's model-vs-measured report can join any family.
+    """
+    from repro.core import tiling
+    from repro.kernels import mamba_scan as ms_lib
+
+    tiling.check_mode(mode)
+    C = max(1, min(chunk, seq_len))
+    bm = max(1, min(block_b, batch))
+    nc = tiling.ceil_chunks(seq_len, C)
+    rows = tiling.pad_tiles(batch, bm)       # padded batch extent
+    t_rows = tiling.streamed_axis_rows(seq_len, C)       # nc * C
+    per_step_flops = 8 * d_inner * d_state
+    # x in dtype; dt f32; b, c f32
+    tiles_in = rows * t_rows * (d_inner * dtype_bytes + d_inner * 4
+                                + 2 * d_state * 4)
+    out_tiles = rows * t_rows * d_inner * dtype_bytes
+    state_io = rows * 2 * d_inner * d_state * 4          # h0 + h_out
+    a_bytes = d_inner * d_state * 4                      # A crosses once
+    flops = rows * t_rows * per_step_flops
+    hbm_bytes = tiles_in + out_tiles + state_io + a_bytes
+    if mode == "bwd":
+        flops *= 3                      # linearised recompute + cot flow
+        # stored per-chunk state trajectory in, dy in, dx/ddt/db/dc out,
+        # dA + dh0 out once
+        hbm_bytes += (rows * nc * d_inner * d_state * 4
+                      + out_tiles + tiles_in
+                      + a_bytes + rows * d_inner * d_state * 4)
+    resident = ms_lib.working_set_bytes(seq_len, d_inner, d_state, bm, C,
+                                        dtype_bytes, mode=mode)
     return {
         "flops": float(flops),
         "hbm_bytes": float(hbm_bytes),

@@ -31,6 +31,15 @@ Families registered here:
   ``chunked_scan`` (kernels/wkv6 — ONE Pallas dispatch forward, one
   reverse-sweep dispatch backward, any T).  Viability comes from
   ``kernels/wkv6.choose_chunk``.
+* ``mamba`` — ``scan`` (the per-step ``lax.scan`` oracle,
+  kernels/mamba_scan.mamba_scan_ref — the models/mamba recurrence) and
+  ``fused_scan`` (kernels/mamba_scan.mamba_scan — ONE Pallas dispatch
+  forward, one reverse-sweep dispatch backward, any T).  Viability comes
+  from ``kernels/mamba_scan.choose_blocks``.
+
+All three budget models and tile searches are thin tables over the shared
+``core/tiling`` substrate — registering a family takes a working-set term
+table and a ``fits`` closure, not a bespoke search.
 
 All plan functions within a family share one calling convention;
 ``Family.apply`` / ``Family.grads`` run a plan and return a pytree of
@@ -420,8 +429,8 @@ def _rwkv_chunked_xla(r, k, v, logw, u, state, *, chunk):
     return out.astype(v.dtype), state
 
 
-def _rwkv_chunked_scan(r, k, v, logw, u, state, *, chunk, bwd=None,
-                       interpret=True):
+def _rwkv_chunked_scan(r, k, v, logw, u, state, *, chunk, bh_tile=1,
+                       bwd=None, interpret=True):
     """kernels/wkv6 Pallas plan: model layout (B,S,H,*) folded to the
     kernel's (B*H, S, *), u broadcast per batch-head (its VJP sums the
     cotangent back over B), any T via the kernel's identity zero-pad."""
@@ -438,8 +447,8 @@ def _rwkv_chunked_scan(r, k, v, logw, u, state, *, chunk, bwd=None,
     ub = jnp.broadcast_to(u[None], (B, H, dk)).reshape(B * H, dk)
     out, s_out = wkv6_lib.wkv6(
         merge(r), merge(k), merge(v), merge(logw), ub,
-        state.reshape(B * H, dk, dv), chunk=chunk, bwd=bwd,
-        interpret=interpret)
+        state.reshape(B * H, dk, dv), chunk=chunk, bh_tile=bh_tile,
+        bwd=bwd, interpret=interpret)
     out = jnp.swapaxes(out.reshape(B, H, S, dv), 1, 2)
     return out, s_out.reshape(B, H, dk, dv)
 
@@ -496,15 +505,16 @@ def _rwkv_profile_candidates(*, vmem_budget: int | None = None,
                              max_points: int = 4, seq_len: int = 64,
                              n_bh: int = 4, dk: int = 8, dv: int = 8,
                              target: int = 16) -> list[ProfileCandidate]:
-    """Measured-profiler candidates for the rwkv6 family: jitted
-    ``chunked_scan`` (kernels/wkv6) dispatches along the halving chunk
-    search ``choose_chunk`` walks — target C first, then C/2, C/4, ... —
-    keeping only chunks whose working set fits the budget.  ``model_s``
-    comes from ``analysis.wkv6_stream_costs``."""
+    """Measured-profiler candidates for the rwkv6 family over the widened
+    ``(bh_tile, chunk)`` surface: for each bh tile on ``choose_blocks``'s
+    halving walk (coarsest first), jitted ``chunked_scan`` (kernels/wkv6)
+    dispatches along the halving chunk search — target C first, then C/2,
+    C/4, ... — keeping only points whose working set fits the budget.
+    ``model_s`` comes from ``analysis.wkv6_stream_costs``."""
     import functools
 
     from repro import analysis
-    from repro.core import factorization as fz
+    from repro.core import factorization as fz, tiling
     from repro.kernels import wkv6 as wkv6_lib
 
     budget = fz.DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
@@ -517,18 +527,28 @@ def _rwkv_profile_candidates(*, vmem_budget: int | None = None,
     state = jax.random.normal(ks[5], (n_bh, dk, dv)) * 0.3
 
     out: list[ProfileCandidate] = []
-    c = max(1, min(target, seq_len))
-    while len(out) < max_points:
-        if wkv6_lib.working_set_bytes(seq_len, dk, dv, c) <= budget:
-            fn = jax.jit(functools.partial(wkv6_lib.wkv6, chunk=c))
-            costs = analysis.wkv6_stream_costs(seq_len, n_bh, dk, dv, c)
-            out.append(ProfileCandidate(
-                "rwkv6", "chunked_scan", {"chunk": c},
-                fn, (r, k, v, logw, u, state),
-                model_s=max(costs["t_compute"], costs["t_memory"])))
-        if c == 1:
+    per_tile = max(1, max_points // 2)   # spread points over both axes
+    for bt in tiling.halving(n_bh):
+        c = max(1, min(target, seq_len))
+        taken = 0
+        while len(out) < max_points and taken < per_tile:
+            ws = wkv6_lib.working_set_bytes(seq_len, dk, dv, c,
+                                            bh_tile=bt)
+            if ws <= budget:
+                fn = jax.jit(functools.partial(
+                    wkv6_lib.wkv6, chunk=c, bh_tile=bt))
+                costs = analysis.wkv6_stream_costs(
+                    seq_len, n_bh, dk, dv, c, bh_tile=bt)
+                out.append(ProfileCandidate(
+                    "rwkv6", "chunked_scan", {"chunk": c, "bh_tile": bt},
+                    fn, (r, k, v, logw, u, state),
+                    model_s=max(costs["t_compute"], costs["t_memory"])))
+                taken += 1
+            if c == 1:
+                break
+            c //= 2
+        if len(out) >= max_points:
             break
-        c //= 2
     return out
 
 
@@ -548,5 +568,181 @@ def _build_rwkv_family() -> Family:
         profile_hook=_rwkv_profile_candidates)
 
 
+# ===========================================================================
+# mamba family — lax.scan oracle, fused Pallas stepwise selective scan
+# ===========================================================================
+#: fused-vs-scan agreement band: both paths run the identical per-step
+#: recurrence in f32, diffs come only from XLA fusion inside a step
+MAMBA_TOL = {"float32": dict(rtol=2e-5, atol=2e-5),
+             "bfloat16": dict(rtol=2e-2, atol=2e-2)}
+MAMBA_GRAD_TOL = {"float32": dict(rtol=2e-4, atol=2e-5)}
+
+_MAMBA_EXACT = EquivalencePolicy("exact", MAMBA_TOL, MAMBA_GRAD_TOL)
+
+#: (B, T, d_inner, d_state, chunk, block_b) — C=1, C=T, non-dividing T
+#: (pad path) and a non-dividing batch tile (row-mask path) all on the
+#: table, so every clamp/pad branch is part of the sweep
+_MAMBA_CASES = (
+    Case("c8t24", (2, 24, 8, 4, 8, 2)),                     # C | T, bm | B
+    Case("c1", (2, 12, 8, 4, 1, 2), heavy_grad=False),      # C=1: per-step
+    Case("cT", (1, 16, 8, 4, 16, 1)),                       # C=T: one chunk
+    Case("oddT", (2, 23, 8, 4, 8, 2), heavy_grad=False),    # pad path
+    Case("btail", (3, 16, 8, 4, 8, 2)),                     # bm does not | B
+    Case("long", (2, 96, 16, 8, 16, 2), heavy=True),
+)
+
+
+def _mamba_make_inputs(case: Case, dtype: str):
+    import zlib
+
+    B, T, di, ds, chunk, block_b = case.shape
+    dt_ = jnp.dtype(dtype)
+    seed = zlib.crc32(case.label.encode()) % (2 ** 31)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (B, T, di), dt_)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, di)))   # f32, > 0
+    b = jax.random.normal(ks[2], (B, T, ds))                     # f32
+    c = jax.random.normal(ks[3], (B, T, ds))                     # f32
+    a = -jnp.exp(jax.random.normal(ks[4], (di, ds)))             # f32, < 0
+    h0 = jax.random.normal(ks[5], (B, di, ds)) * 0.3             # f32
+    return (x, dt, b, c, a, h0), chunk, block_b
+
+
+def _mamba_scan(x, dt, b, c, a, h0, *, chunk, block_b):
+    """Per-step lax.scan oracle — the models/mamba recurrence verbatim
+    (kernels/mamba_scan.mamba_scan_ref)."""
+    from repro.kernels import mamba_scan as ms_lib
+
+    return ms_lib.mamba_scan_ref(x, dt, b, c, a, h0)
+
+
+def _mamba_fused_scan(x, dt, b, c, a, h0, *, chunk, block_b, bwd=None,
+                      interpret=True):
+    """kernels/mamba_scan Pallas plan: ONE dispatch forward over a
+    (batch-tile, time-chunk) grid with the f32 state carried in VMEM
+    scratch, one reverse-sweep dispatch backward, any T and B via the
+    identity zero-pad (dt=0 rows neither decay nor inject)."""
+    from repro.kernels import mamba_scan as ms_lib
+
+    if bwd is None:
+        bwd = ms_lib.FUSED_BWD
+    return ms_lib.mamba_scan(x, dt, b, c, a, h0, chunk=chunk,
+                             block_b=block_b, bwd=bwd, interpret=interpret)
+
+
+MAMBA_PLANS: dict[str, Callable] = {
+    "scan": _mamba_scan,
+    "fused_scan": _mamba_fused_scan,
+}
+
+
+def _mamba_apply(plan: str, inputs):
+    args, chunk, block_b = inputs
+    return MAMBA_PLANS[plan](*args, chunk=chunk, block_b=block_b)
+
+
+def _mamba_grads(plan: str, inputs):
+    (x, dt, b, c, a, h0), chunk, block_b = inputs
+
+    def loss(x, dt, b, c, a, h0):
+        y, h = MAMBA_PLANS[plan](x, dt, b, c, a, h0, chunk=chunk,
+                                 block_b=block_b)
+        return (jnp.sum(jnp.tanh(y.astype(jnp.float32)))
+                + 0.5 * jnp.sum(h * h))
+
+    return jax.grad(loss, argnums=(0, 1, 2, 3, 4, 5))(
+        x, dt, b, c, a, h0)
+
+
+def mamba_viability(batch: int, seq_len: int, d_inner: int, d_state: int,
+                    *, dtype_bytes: int = 4,
+                    vmem_budget: int | None = None, train: bool = False,
+                    scan_plan_names: tuple[str, ...] = ("fused_scan",)
+                    ) -> Callable[[str], bool]:
+    """Fig 7 ``viable=`` predicate for the mamba family, from the
+    kernels/mamba_scan working-set model: the Pallas plan is only a real
+    plan while ``choose_blocks`` finds a (batch-tile, time-chunk) pair
+    that fits the budget — ``train=True`` sizes the reverse-sweep
+    backward instead (~3x), exactly like ``rwkv_viability(train=True)``.
+    The ``scan`` oracle stays viable (it is the CPU-path fallback)."""
+    from repro.kernels import mamba_scan as ms_lib
+
+    blocks = ms_lib.choose_blocks(
+        batch, seq_len, d_inner, d_state, dtype_bytes=dtype_bytes,
+        vmem_budget=vmem_budget, mode="bwd" if train else "fwd")
+
+    def viable(plan_name: str) -> bool:
+        return blocks is not None or plan_name not in scan_plan_names
+
+    return viable
+
+
+def _mamba_profile_candidates(*, vmem_budget: int | None = None,
+                              max_points: int = 4, batch: int = 4,
+                              seq_len: int = 64, d_inner: int = 16,
+                              d_state: int = 8) -> list[ProfileCandidate]:
+    """Measured-profiler candidates for the mamba family over the
+    substrate's (block_b, time_chunk) surface: for each batch tile on the
+    halving walk (coarsest first), whole-T residency first then halving
+    time chunks — the exact coarseness order ``choose_blocks`` searches.
+    ``model_s`` comes from ``analysis.mamba_scan_stream_costs``."""
+    import functools
+
+    from repro import analysis
+    from repro.core import factorization as fz, tiling
+    from repro.kernels import mamba_scan as ms_lib
+
+    budget = fz.DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    x = jax.random.normal(ks[0], (batch, seq_len, d_inner), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(
+        ks[1], (batch, seq_len, d_inner)))
+    b = jax.random.normal(ks[2], (batch, seq_len, d_state))
+    c = jax.random.normal(ks[3], (batch, seq_len, d_state))
+    a = -jnp.exp(jax.random.normal(ks[4], (d_inner, d_state)))
+    h0 = jax.random.normal(ks[5], (batch, d_inner, d_state)) * 0.3
+
+    out: list[ProfileCandidate] = []
+    per_tile = max(1, max_points // 2)   # spread points over both axes
+    for bm in tiling.halving(batch):
+        taken = 0
+        cn = seq_len
+        while len(out) < max_points and taken < per_tile:
+            ws = ms_lib.working_set_bytes(seq_len, d_inner, d_state,
+                                          bm, cn)
+            if ws <= budget:
+                fn = jax.jit(functools.partial(
+                    ms_lib.mamba_scan, chunk=cn, block_b=bm))
+                costs = analysis.mamba_scan_stream_costs(
+                    seq_len, batch, d_inner, d_state, bm, cn)
+                out.append(ProfileCandidate(
+                    "mamba", "fused_scan",
+                    {"block_b": bm, "chunk": cn},
+                    fn, (x, dt, b, c, a, h0),
+                    model_s=max(costs["t_compute"], costs["t_memory"])))
+                taken += 1
+            if cn == 1:
+                break
+            cn //= 2
+        if len(out) >= max_points:
+            break
+    return out
+
+
+def _build_mamba_family() -> Family:
+    specs = {
+        "scan": PlanSpec("scan", _mamba_scan, _MAMBA_EXACT),
+        "fused_scan": PlanSpec("fused_scan", _mamba_fused_scan,
+                               _MAMBA_EXACT,
+                               fwd_dispatches=1, train_dispatches=2),
+    }
+    return Family(
+        name="mamba", oracle="scan", plans=specs, cases=_MAMBA_CASES,
+        dtypes=("float32", "bfloat16"), make_inputs=_mamba_make_inputs,
+        apply=_mamba_apply, grads=_mamba_grads, viability=mamba_viability,
+        profile_hook=_mamba_profile_candidates)
+
+
 register_family(_build_lstm_family())
 register_family(_build_rwkv_family())
+register_family(_build_mamba_family())

@@ -69,7 +69,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import factorization
+from repro.core import factorization, tiling
 
 F32 = jnp.float32
 
@@ -166,12 +166,8 @@ def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
     (straight-through gradients land on the f32 master weights, never on
     the int8 stack) — the f32 dw/db accumulator scratch is unchanged
     either way."""
-    if mode not in ("fwd", "bwd"):
-        raise ValueError(f"mode must be 'fwd' or 'bwd', got {mode!r}")
-    if quantized:
-        wb = 1 if w_dtype_bytes is None else w_dtype_bytes
-    else:
-        wb = dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
+    ws = tiling.WorkingSet(mode)
+    wb = tiling.weight_dtype_bytes(dtype_bytes, w_dtype_bytes, quantized)
     w_count = n_layers * (p_width + hidden) * 4 * hidden
     b_count = n_layers * 4 * hidden
     weights = w_count * wb
@@ -180,31 +176,30 @@ def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,
         weights += (p_width + hidden) * 4 * hidden * 4   # dequant temporary
     else:
         biases = b_count * wb
-    if time_chunk is None:
-        x_rows = seq_len                                 # whole T resident
-    else:
-        x_rows = 2 * min(time_chunk, seq_len)            # double buffer
+    ws.add("weights", weights).add("biases", biases)
+    x_rows = tiling.streamed_rows(seq_len, time_chunk)
     x_block = block_b * x_rows * p_width * dtype_bytes
-    state = 2 * n_layers * block_b * hidden * 4          # f32 scratch
-    outs = 2 * n_layers * block_b * hidden * dtype_bytes
-    total = weights + biases + x_block + state + outs
-    if mode == "bwd":
-        if time_chunk is None:
-            traj = 2 * seq_len * n_layers * block_b * hidden * 4  # resident
-        else:
-            tc = min(time_chunk, seq_len)
-            tw = tc + 1 if seq_len > tc else tc          # + the t-1 row
-            traj = 2 * 2 * tw * n_layers * block_b * hidden * 4  # 2 slots
-        dw_scratch = (w_count + b_count) * 4                   # f32 accum
-        if quantized:
-            dw_out = (w_count + b_count) * 4     # f32 master-weight grads
-        else:
-            dw_out = weights + biases                          # param dtype
-        dx_block = x_block                           # dx mirrors x residency
-        # (dc, dh) carries reuse `state`; the final-state cotangent blocks:
-        cots = 2 * n_layers * block_b * hidden * dtype_bytes
-        total += traj + dw_scratch + dw_out + dx_block + cots
-    return total
+    ws.add("x_block", x_block)
+    ws.add("state", 2 * n_layers * block_b * hidden * 4)     # f32 scratch
+    ws.add("outs", 2 * n_layers * block_b * hidden * dtype_bytes)
+    if time_chunk is None:
+        traj_rows = seq_len                                  # resident
+    else:                                         # 2 slots x (tc+1)-row win
+        traj_rows = tiling.STREAM_SLOTS * tiling.bwd_window_rows(
+            seq_len, time_chunk)
+    ws.add("traj", 2 * traj_rows * n_layers * block_b * hidden * 4,
+           bwd_only=True)
+    ws.add("dw_scratch", (w_count + b_count) * 4, bwd_only=True)  # f32 accum
+    if quantized:
+        dw_out = (w_count + b_count) * 4         # f32 master-weight grads
+    else:
+        dw_out = weights + biases                              # param dtype
+    ws.add("dw_out", dw_out, bwd_only=True)
+    ws.add("dx_block", x_block, bwd_only=True)   # dx mirrors x residency
+    # (dc, dh) carries reuse `state`; the final-state cotangent blocks:
+    ws.add("cots", 2 * n_layers * block_b * hidden * dtype_bytes,
+           bwd_only=True)
+    return ws.total()
 
 
 def choose_batch_block(batch: int, seq_len: int, n_layers: int,
@@ -218,8 +213,8 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
 
     Seeds the batch tile from factorization.choose_block on the per-step
     gate matmul (B, P+H) x (P+H, 4H) — the coarsest MXU-aligned block — then
-    searches the joint ``(block_b, time_chunk)`` surface in MobiRNN
-    coarseness order:
+    searches the joint ``(block_b, time_chunk)`` surface via the shared
+    ``core/tiling.joint_search`` in MobiRNN coarseness order:
 
     1. whole-T residency at the current batch tile (``time_chunk=None`` —
        no streaming machinery at all) when it fits;
@@ -255,25 +250,12 @@ def choose_batch_block(batch: int, seq_len: int, n_layers: int,
                                  dtype_bytes, w_dtype_bytes, mode=mode,
                                  time_chunk=tc, quantized=quantized) <= budget
 
-    bm, _, _ = factorization.choose_block(
+    seed, _, _ = factorization.choose_block(
         batch, 4 * hidden, p_width + hidden, bytes_per_elem=dtype_bytes,
         vmem_budget=budget)
-    bm = min(bm, batch)
-    while bm >= 1:
-        if fits(bm, None):
-            return SeqBlocks(bm, None)
-        if allow_chunk:
-            tc = max(seq_len // 2, 1)
-            while tc >= 1:
-                if fits(bm, tc):
-                    return SeqBlocks(bm, tc)
-                if tc == 1:
-                    break
-                tc //= 2
-        if bm == 1:
-            break
-        bm = max(bm // 2, 1)
-    return None
+    found = tiling.joint_search(batch, seq_len, fits, seed_batch_tile=seed,
+                                allow_chunk=allow_chunk)
+    return None if found is None else SeqBlocks(*found)
 
 
 # ---------------------------------------------------------------------------

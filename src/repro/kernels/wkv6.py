@@ -13,12 +13,32 @@ Numerical safety: all within-chunk decay exponents are differences
 L_a - L_b with a >= b of a running log-decay cumsum, hence <= 0 — no
 exp overflow regardless of decay strength (logw <= 0).
 
-Grid: (batch*heads, ceil(T/C)); the chunk dimension is innermost (sequential
-on TPU), so the scratch state carries correctly.  Non-dividing T is
-zero-padded at the END: padded steps have r = k = v = 0 and logw = 0, which
-is the IDENTITY on the state (exp(0) = 1 decay, zero k^T v outer product)
-and contributes zero output rows that the wrapper slices off — so padding
-never changes results, only the grid extent.
+Tiling (the lstm_seq contract, via core/tiling): the work unit is a
+``(bh_tile, chunk)`` tile of the ``(BH, T)`` surface.  Batch-head rows are
+independent, so they tile freely — ``bh_tile`` rows share one grid step,
+their f32 states carried together in VMEM scratch (per-row math is
+statically unrolled, so results are bit-identical at ANY bh_tile).  The
+time axis STREAMS: the r/k/v/logw chunk windows live in HBM
+(``pltpu.ANY``) and the kernel moves them through two-slot double-buffered
+VMEM windows with async copies, prefetching chunk t+1 while chunk t
+computes (pallas_guide §Double Buffering — the same pipeline as
+kernels/lstm_seq's input streaming).  The backward streams the SAME windows
+plus the dout cotangent and the stored trajectory states in REVERSE chunk
+order.  Streaming changes data movement only — the chunk math is untouched,
+so streamed kernels are bit-identical to the window-per-BlockSpec layout at
+``chunk=1``, ``chunk=T``, and non-dividing ``T``/``BH``
+(tests/test_wkv6.py asserts it).
+
+Grid: (ceil(BH/bh_tile), ceil(T/C)); the chunk dimension is innermost
+(sequential on TPU), so the scratch state carries correctly.  Non-dividing
+T is zero-padded at the END: padded steps have r = k = v = 0 and logw = 0,
+which is the IDENTITY on the state (exp(0) = 1 decay, zero k^T v outer
+product) and contributes zero output rows that the wrapper slices off — so
+padding never changes results, only the grid extent.  Non-dividing BH is
+zero-padded the same way: batch-head rows are independent and all-zero
+inputs with zero incoming state produce zero outputs and zero state, so the
+padded tail rows of the shared f32 state scratch can never leak into real
+rows; the wrapper slices them off.
 
 Autodiff: ``pallas_call`` has no VJP rule, so ``wkv6`` wraps the kernel in a
 ``jax.custom_vjp`` mirroring kernels/lstm_seq.py.  Under differentiation the
@@ -26,13 +46,15 @@ forward runs a trajectory-emitting variant (same math, same single dispatch)
 that additionally writes the CHUNK-INCOMING states ``s_traj
 (BH, nt, dk, dv)`` — the residual the backward recomputes from — and the
 backward runs the whole reverse-time sweep in ONE kernel dispatch: the grid
-walks chunks in reverse via reversed index maps, the state cotangent ``ds``
-lives in VMEM scratch across the sweep, ``du`` accumulates in scratch, and
-each chunk's (dr, dk, dv, dlogw) falls out of ``jax.vjp`` of the pure chunk
+walks chunks in reverse, the streamed windows arrive through the same
+two-slot prefetch pipeline (window t+1 of the SWEEP — chunk nt-2-t — in
+flight while chunk nt-1-t computes), the state cotangent ``ds`` lives in
+VMEM scratch across the sweep, ``du`` accumulates in scratch, and each
+chunk's (dr, dk, dv, dlogw) falls out of ``jax.vjp`` of the pure chunk
 math re-linearised from the stored incoming state.  ``value_and_grad`` is
-exactly 2 Pallas dispatches at any T — O(1) in T, O(T/C) grid steps
-(``analysis.count_pallas_grid_steps``).  ``bwd=ORACLE_BWD`` restores the
-oracle-VJP fallback (differentiate kernels/ref.wkv6), used when
+exactly 2 Pallas dispatches at any T — O(1) in T, O(BH/bh_tile * T/C) grid
+steps (``analysis.count_pallas_grid_steps``).  ``bwd=ORACLE_BWD`` restores
+the oracle-VJP fallback (differentiate kernels/ref.wkv6), used when
 ``choose_chunk(mode="bwd")`` finds no viable chunk.
 """
 from __future__ import annotations
@@ -45,7 +67,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import factorization
+from repro.core import factorization, tiling
 
 F32 = jnp.float32
 
@@ -57,78 +79,111 @@ FUSED_BWD = 1
 
 
 # ---------------------------------------------------------------------------
-# VMEM budget — the (chunk,) analogue of lstm_seq's (block_b, time_chunk).
+# VMEM budget — the (bh_tile, chunk) analogue of lstm_seq's
+# (block_b, time_chunk), built on the same core/tiling substrate.
 # ---------------------------------------------------------------------------
 class WkvBlocks(NamedTuple):
-    """The chunked-scan kernel's tiling decision: the chunk length C.
+    """The chunked-scan kernel's tiling decision: chunk length x BH tile.
 
-    The work-unit-coarseness knob of the WKV6 plan — larger C means denser
-    MXU matmuls and fewer grid steps (O(T/C)), at the price of the
-    (C, C, dk) f32 intra-chunk decay tensor, the dominant VMEM term."""
+    ``chunk`` is the work-unit-coarseness knob of the WKV6 plan — larger C
+    means denser MXU matmuls and fewer grid steps (O(T/C)), at the price of
+    the (C, C, dk) f32 intra-chunk decay tensor, the dominant VMEM term.
+    ``bh_tile`` is the batch axis of the same surface — how many
+    independent batch-head rows share one grid step (coarser = fewer grid
+    steps, more streamed-window and state bytes per step)."""
     chunk: int
+    bh_tile: int = 1
 
 
 def working_set_bytes(seq_len: int, dk: int, dv: int, chunk: int,
-                      dtype_bytes: int = 4, mode: str = "fwd") -> int:
-    """VMEM working set of one (batch-head, chunk) grid step.
+                      dtype_bytes: int = 4, mode: str = "fwd", *,
+                      bh_tile: int = 1) -> int:
+    """VMEM working set of one (bh_tile, chunk) grid step, per phase.
 
-    ``mode="fwd"`` sizes the inference forward: the four (C, dk/dv) chunk
-    tiles + the output tile, u, the s0/s_out blocks, the f32 state scratch,
-    and the (C, C, dk) f32 intra-chunk decay tensor plus its (C, C) score
-    matrix — the term that grows quadratically in C and makes the chunk
-    length a real budget decision.
+    ``mode="fwd"`` sizes the inference forward: the two-slot double-buffered
+    r/k/v/logw streamed windows + the output tile, u, the s0/s_out blocks,
+    the f32 state scratch (all x ``bh_tile`` rows), and the (C, C, dk) f32
+    intra-chunk decay tensor plus its (C, C) score matrix — priced once,
+    not per row, because the per-row chunk math unrolls sequentially within
+    the grid step; it is the term that grows quadratically in C and makes
+    the chunk length a real budget decision.
 
     ``mode="bwd"`` sizes the reverse-sweep dispatch, which strictly
     dominates the trajectory-emitting forward that feeds it: on top of the
-    forward set it holds the stored chunk-incoming state tile, the dout
-    cotangent tile, the mirrored (dr, dk, dv, dlogw) output tiles, the ds
-    state-cotangent scratch + ds0/ds_fin blocks, the du accumulator, and a
-    second copy of the intra-chunk tensors (the linearised chunk recompute
-    keeps forward values live while the cotangent flows back) — roughly 3x
-    the forward working set at typical head shapes.
+    forward set it holds the two-slot streamed chunk-incoming state and
+    dout cotangent windows, the mirrored (dr, dk, dv, dlogw) output tiles,
+    the ds state-cotangent scratch + ds0/ds_fin blocks, the du accumulator,
+    and a second copy of the intra-chunk tensors (the linearised chunk
+    recompute keeps forward values live while the cotangent flows back) —
+    roughly 3x the forward working set at typical head shapes.
     """
-    if mode not in ("fwd", "bwd"):
-        raise ValueError(f"mode must be 'fwd' or 'bwd', got {mode!r}")
+    ws = tiling.WorkingSet(mode)
     C = max(1, min(chunk, seq_len))
-    tiles_in = (3 * C * dk + C * dv) * dtype_bytes     # r, k, logw, v
-    out_tile = C * dv * dtype_bytes
-    u_bytes = dk * 4
-    state_io = 2 * dk * dv * 4                         # s0 in + s_out out
-    scratch = dk * dv * 4                              # carried state
+    bt = max(1, bh_tile)
+    row_in = (3 * C * dk + C * dv) * dtype_bytes       # r, k, logw | v
+    out_tile = bt * C * dv * dtype_bytes
     intra = C * C * dk * 4 + C * C * 4                 # exp(diff) + scores
-    total = tiles_in + out_tile + u_bytes + state_io + scratch + intra
-    if mode == "bwd":
-        total += dk * dv * 4                           # s_traj chunk tile
-        total += out_tile                              # dout cotangent tile
-        total += tiles_in                              # dr/dk/dv/dlogw tiles
-        total += dk * dv * 4 + 2 * dk * dv * 4         # ds scratch + ds0/dsf
-        total += dk * 4                                # du accumulator
-        total += intra                                 # linearised recompute
-    return total
+    ws.add("in_windows", tiling.STREAM_SLOTS * bt * row_in)
+    ws.add("out_tile", out_tile)
+    ws.add("u", bt * dk * 4)
+    ws.add("state_io", 2 * bt * dk * dv * 4)           # s0 in + s_out out
+    ws.add("state_scratch", bt * dk * dv * 4)          # carried states
+    ws.add("intra", intra)
+    ws.add("straj_windows", tiling.STREAM_SLOTS * bt * dk * dv * 4,
+           bwd_only=True)
+    ws.add("dout_windows", tiling.STREAM_SLOTS * out_tile, bwd_only=True)
+    ws.add("grad_tiles", bt * row_in, bwd_only=True)   # dr/dk/dv/dlogw
+    ws.add("ds", 3 * bt * dk * dv * 4, bwd_only=True)  # scratch + ds0/dsf
+    ws.add("du", bt * dk * 4, bwd_only=True)
+    ws.add("intra_linearised", intra, bwd_only=True)
+    return ws.total()
+
+
+def choose_blocks(n_bh: int, seq_len: int, dk: int, dv: int, *,
+                  target: int = 32, dtype_bytes: int = 4,
+                  vmem_budget: int | None = None,
+                  mode: str = "fwd") -> WkvBlocks | None:
+    """Pick the (chunk, bh_tile), or None when not viable — the
+    SeqBlocks-style decision function, via the shared
+    ``core/tiling.joint_search`` in MobiRNN coarseness order: the BH tile
+    seeds at ``n_bh`` (coarsest — one grid row), the chunk halves from
+    ``target`` (clamped to T) first, and only when even C=1 does not fit
+    does the BH tile halve — the same keep-the-batch-tile-coarse priority
+    as lstm_seq.choose_batch_block.  This kernel always streams the time
+    axis (there is no whole-T-resident layout), so the search runs with
+    ``whole_t_first=False``: the coarsest chunk IS the coarsest residency.
+
+    Returns None only when even (bh_tile=1, C=1) does not fit — i.e. the
+    per-head state blocks themselves blow VMEM; T alone never disqualifies
+    the plan (the grid streams chunks, residency is O(C) in sequence
+    length).  Callers then route to the stepwise/XLA plan (fwd) or the
+    oracle VJP (bwd)."""
+    budget = factorization.DEFAULT_VMEM_BUDGET if vmem_budget is None \
+        else vmem_budget
+
+    def fits(bt: int, tc: int | None) -> bool:
+        return working_set_bytes(seq_len, dk, dv, tc, dtype_bytes,
+                                 mode=mode, bh_tile=bt) <= budget
+
+    found = tiling.joint_search(
+        n_bh, seq_len, fits, seed_batch_tile=n_bh, whole_t_first=False,
+        chunk_start=max(1, min(target, seq_len)))
+    if found is None:
+        return None
+    bt, c = found
+    return WkvBlocks(c, bt)
 
 
 def choose_chunk(seq_len: int, dk: int, dv: int, *, target: int = 32,
                  dtype_bytes: int = 4, vmem_budget: int | None = None,
                  mode: str = "fwd") -> WkvBlocks | None:
-    """Pick the chunk length, or None when not viable — the SeqBlocks-style
-    decision function the Fig 7 scheduler consumes via ``viable=``.
-
-    Coarseness search in MobiRNN order: start from ``target`` (the config's
-    chunk, clamped to T) and halve until the working set fits the budget.
-    Returns None only when even C=1 does not fit — i.e. the per-head state
-    blocks themselves blow VMEM; T alone never disqualifies the plan (the
-    grid streams chunks, residency is O(C) in sequence length).  Callers
-    then route to the stepwise/XLA plan (fwd) or the oracle VJP (bwd)."""
-    budget = factorization.DEFAULT_VMEM_BUDGET if vmem_budget is None \
-        else vmem_budget
-    c = max(1, min(target, seq_len))
-    while True:
-        if working_set_bytes(seq_len, dk, dv, c, dtype_bytes,
-                             mode=mode) <= budget:
-            return WkvBlocks(c)
-        if c == 1:
-            return None
-        c = max(c // 2, 1)
+    """The chunk-only decision at ``bh_tile=1`` (one BH row per grid step —
+    the layout the registered ``chunked_scan`` plan serves, keeping grid
+    steps at exactly BH * ceil(T/C)).  See ``choose_blocks`` for the joint
+    surface."""
+    return choose_blocks(1, seq_len, dk, dv, target=target,
+                         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+                         mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -170,115 +225,178 @@ def _chunk_math(r, k, v, logw, u, s):
     return out, s_new
 
 
-def _load_chunk(r_ref, k_ref, v_ref, lw_ref, u_ref):
-    return (r_ref[0].astype(F32), k_ref[0].astype(F32),
-            v_ref[0].astype(F32), lw_ref[0].astype(F32),
-            u_ref[0].astype(F32))
+# ---------------------------------------------------------------------------
+# Kernel bodies — time windows stream through two-slot VMEM double buffers.
+# ---------------------------------------------------------------------------
+def _window_dma(hbm, buf, sems, j, slot, idx, *, ib, bt, chunk):
+    """Async copy of chunk window ``idx`` of stream ``j`` into buffer slot
+    ``slot``: a (bt, chunk, d) tile of the (BHp, Tp, d) HBM array (the
+    wrapper zero-pads both axes, so the window is always in bounds).
+    ``ib`` is the BH-tile id, captured ONCE at kernel top — calling
+    ``pl.program_id`` inside a ``pl.when`` branch does not lower."""
+    return pltpu.make_async_copy(
+        hbm.at[pl.ds(ib * bt, bt), pl.ds(idx * chunk, chunk), :],
+        buf.at[slot], sems.at[j, slot])
 
 
-def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
-            out_ref, s_out_ref, state):
+def _fwd_body(r_hbm, k_hbm, v_hbm, lw_hbm, u_ref, s0_ref, out_ref, s_out_ref,
+              straj_ref, rbuf, kbuf, vbuf, lwbuf, state, sems):
+    """Forward/trajectory body: chunk t's r/k/v/logw windows arrive through
+    the two-slot pipeline (slot t%2 computes while slot (t+1)%2 prefetches),
+    the bh_tile f32 states carry in VMEM scratch across the inner grid
+    dimension, and the per-row chunk math is STATICALLY unrolled so results
+    are bit-identical at any bh_tile."""
+    ib = pl.program_id(0)
     t = pl.program_id(1)
     nt = pl.num_programs(1)
-    r, k, v, logw, u = _load_chunk(r_ref, k_ref, v_ref, lw_ref, u_ref)
+    bt, chunk = rbuf.shape[1], rbuf.shape[2]
+    streams = ((r_hbm, rbuf), (k_hbm, kbuf), (v_hbm, vbuf), (lw_hbm, lwbuf))
+
+    def dma(j, slot, idx):
+        hbm, buf = streams[j]
+        return _window_dma(hbm, buf, sems, j, slot, idx, ib=ib, bt=bt,
+                           chunk=chunk)
 
     @pl.when(t == 0)
     def _init():
-        state[...] = s0_ref[0].astype(F32)
+        for j in range(len(streams)):                    # warm-up windows
+            dma(j, 0, 0).start()
+        state[...] = s0_ref[...].astype(F32)
 
-    out, s_new = _chunk_math(r, k, v, logw, u, state[...])
-    state[...] = s_new
-    out_ref[0] = out.astype(out_ref.dtype)
+    slot = jax.lax.rem(t, 2)
+
+    @pl.when(t + 1 < nt)
+    def _prefetch():
+        nxt = jax.lax.rem(t + 1, 2)
+        for j in range(len(streams)):
+            dma(j, nxt, t + 1).start()
+
+    for j in range(len(streams)):
+        dma(j, slot, t).wait()
+
+    r = rbuf[slot].astype(F32)
+    k = kbuf[slot].astype(F32)
+    v = vbuf[slot].astype(F32)
+    logw = lwbuf[slot].astype(F32)
+    for i in range(bt):                                  # static unroll
+        s_in = state[i]
+        if straj_ref is not None:
+            straj_ref[i, 0] = s_in                # incoming state of chunk t
+        out, s_new = _chunk_math(r[i], k[i], v[i], logw[i],
+                                 u_ref[i].astype(F32), s_in)
+        state[i] = s_new
+        out_ref[i] = out.astype(out_ref.dtype)
 
     @pl.when(t == nt - 1)
     def _final():
-        s_out_ref[0] = s_new.astype(s_out_ref.dtype)
+        s_out_ref[...] = state[...].astype(s_out_ref.dtype)
 
 
-def _traj_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
-                 out_ref, s_out_ref, straj_ref, state):
+def _kernel(r_hbm, k_hbm, v_hbm, lw_hbm, u_ref, s0_ref, out_ref, s_out_ref,
+            rbuf, kbuf, vbuf, lwbuf, state, sems):
+    _fwd_body(r_hbm, k_hbm, v_hbm, lw_hbm, u_ref, s0_ref, out_ref, s_out_ref,
+              None, rbuf, kbuf, vbuf, lwbuf, state, sems)
+
+
+def _traj_kernel(r_hbm, k_hbm, v_hbm, lw_hbm, u_ref, s0_ref, out_ref,
+                 s_out_ref, straj_ref, rbuf, kbuf, vbuf, lwbuf, state, sems):
     """Trajectory-emitting forward: same math and dispatch count as
-    ``_kernel``, plus the CHUNK-INCOMING state written to ``s_traj`` —
+    ``_kernel``, plus the CHUNK-INCOMING states written to ``s_traj`` —
     the residual the reverse sweep re-linearises each chunk from."""
-    t = pl.program_id(1)
-    nt = pl.num_programs(1)
-    r, k, v, logw, u = _load_chunk(r_ref, k_ref, v_ref, lw_ref, u_ref)
-
-    @pl.when(t == 0)
-    def _init():
-        state[...] = s0_ref[0].astype(F32)
-
-    s = state[...]
-    straj_ref[0, 0] = s                       # incoming state of chunk t
-    out, s_new = _chunk_math(r, k, v, logw, u, s)
-    state[...] = s_new
-    out_ref[0] = out.astype(out_ref.dtype)
-
-    @pl.when(t == nt - 1)
-    def _final():
-        s_out_ref[0] = s_new.astype(s_out_ref.dtype)
+    _fwd_body(r_hbm, k_hbm, v_hbm, lw_hbm, u_ref, s0_ref, out_ref, s_out_ref,
+              straj_ref, rbuf, kbuf, vbuf, lwbuf, state, sems)
 
 
-def _bwd_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, straj_ref, do_ref,
+def _bwd_kernel(r_hbm, k_hbm, v_hbm, lw_hbm, u_ref, straj_hbm, do_hbm,
                 dsf_ref, dr_ref, dk_ref, dv_ref, dlw_ref, du_ref, ds0_ref,
-                ds_scr, du_scr):
+                rbuf, kbuf, vbuf, lwbuf, dobuf, sbuf, ds_scr, du_scr, sems):
     """Reverse-time BPTT sweep over chunks — ONE dispatch for the whole
-    backward.  The grid's chunk dimension is index-mapped in REVERSE, so
-    grid step t processes chunk nt-1-t; the state cotangent ``ds`` carries
-    across grid steps in VMEM scratch (seeded from the final-state
-    cotangent at reverse step 0), ``du`` accumulates in scratch and is
-    written once at the last reverse step, where ``ds0`` (the cotangent of
-    the incoming state) is also emitted."""
+    backward.  Grid step t processes chunk nt-1-t; the r/k/v/logw/dout
+    windows AND the stored chunk-incoming states stream through the same
+    two-slot pipeline as the forward, in REVERSE chunk order (sweep window
+    t+1 — chunk nt-2-t — prefetches while chunk nt-1-t computes).  The
+    state cotangents ``ds`` carry across grid steps in VMEM scratch (seeded
+    from the final-state cotangent at reverse step 0), ``du`` accumulates
+    per row in scratch, and both are written once at the last reverse step,
+    where ``ds0`` (the cotangent of the incoming state) is also emitted."""
+    ib = pl.program_id(0)
     t = pl.program_id(1)
     nt = pl.num_programs(1)
-    r, k, v, logw, u = _load_chunk(r_ref, k_ref, v_ref, lw_ref, u_ref)
-    s_in = straj_ref[0, 0]                    # chunk-incoming state (f32)
-    dout = do_ref[0].astype(F32)
+    bt, chunk = rbuf.shape[1], rbuf.shape[2]
+    kc = nt - 1 - t                           # reverse-order chunk index
+    win_streams = ((r_hbm, rbuf), (k_hbm, kbuf), (v_hbm, vbuf),
+                   (lw_hbm, lwbuf), (do_hbm, dobuf))
+    n_streams = len(win_streams) + 1          # + the s_traj state stream
+
+    def dma(j, slot, idx):
+        if j < len(win_streams):
+            hbm, buf = win_streams[j]
+            return _window_dma(hbm, buf, sems, j, slot, idx, ib=ib, bt=bt,
+                               chunk=chunk)
+        return pltpu.make_async_copy(         # (bt, 1, dk, dv) state window
+            straj_hbm.at[pl.ds(ib * bt, bt), pl.ds(idx, 1), :, :],
+            sbuf.at[slot], sems.at[j, slot])
 
     @pl.when(t == 0)
     def _init():
-        ds_scr[...] = dsf_ref[0].astype(F32)
+        for j in range(n_streams):            # warm-up: last chunk's windows
+            dma(j, 0, kc).start()
+        ds_scr[...] = dsf_ref[...].astype(F32)
         du_scr[...] = jnp.zeros_like(du_scr)
 
-    _, chunk_vjp = jax.vjp(_chunk_math, r, k, v, logw, u, s_in)
-    dr, dk, dv, dlw, du, ds_in = chunk_vjp((dout, ds_scr[...]))
-    ds_scr[...] = ds_in
-    du_scr[...] = du_scr[...] + du[None, :]
-    dr_ref[0] = dr.astype(dr_ref.dtype)
-    dk_ref[0] = dk.astype(dk_ref.dtype)
-    dv_ref[0] = dv.astype(dv_ref.dtype)
-    dlw_ref[0] = dlw.astype(dlw_ref.dtype)
+    slot = jax.lax.rem(t, 2)
+
+    @pl.when(t + 1 < nt)
+    def _prefetch():
+        nxt = jax.lax.rem(t + 1, 2)
+        for j in range(n_streams):
+            dma(j, nxt, kc - 1).start()
+
+    for j in range(n_streams):
+        dma(j, slot, kc).wait()
+
+    r = rbuf[slot].astype(F32)
+    k = kbuf[slot].astype(F32)
+    v = vbuf[slot].astype(F32)
+    logw = lwbuf[slot].astype(F32)
+    dout = dobuf[slot].astype(F32)
+    for i in range(bt):                                  # static unroll
+        _, chunk_vjp = jax.vjp(_chunk_math, r[i], k[i], v[i], logw[i],
+                               u_ref[i].astype(F32), sbuf[slot, i, 0])
+        dr, dkk, dvv, dlw, du, ds_in = chunk_vjp((dout[i], ds_scr[i]))
+        ds_scr[i] = ds_in
+        du_scr[i] = du_scr[i] + du
+        dr_ref[i] = dr.astype(dr_ref.dtype)
+        dk_ref[i] = dkk.astype(dk_ref.dtype)
+        dv_ref[i] = dvv.astype(dv_ref.dtype)
+        dlw_ref[i] = dlw.astype(dlw_ref.dtype)
 
     @pl.when(t == nt - 1)                     # reverse-last = chunk 0
     def _final():
-        du_ref[0] = du_scr[0].astype(du_ref.dtype)
-        ds0_ref[0] = ds_in.astype(ds0_ref.dtype)
+        du_ref[...] = du_scr[...].astype(du_ref.dtype)
+        ds0_ref[...] = ds_scr[...].astype(ds0_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
-# pallas_call wrappers (T % chunk == 0 — the public entry pads)
+# pallas_call wrappers (T % chunk == 0, BH % bh_tile == 0 — the entry pads)
 # ---------------------------------------------------------------------------
-def _chunk_specs(chunk: int, dk: int, dv: int):
-    return [
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
-        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, t, 0)),
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, t, 0)),
-        pl.BlockSpec((1, dk), lambda b, t: (b, 0)),
-    ]
+_ANY = functools.partial(pl.BlockSpec, memory_space=pltpu.ANY)
 
 
-def _fwd_call(r, k, v, logw, u, state, chunk, interpret, traj: bool):
+def _fwd_call(r, k, v, logw, u, state, chunk, bh_tile, interpret,
+              traj: bool):
     BH, T, dk = r.shape
     dv = v.shape[-1]
-    assert T % chunk == 0, (T, chunk)
+    assert T % chunk == 0 and BH % bh_tile == 0, (T, chunk, BH, bh_tile)
     nt = T // chunk
-    in_specs = _chunk_specs(chunk, dk, dv) + [
-        pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+    bt = bh_tile
+    in_specs = [_ANY(), _ANY(), _ANY(), _ANY()] + [
+        pl.BlockSpec((bt, dk), lambda b, t: (b, 0)),
+        pl.BlockSpec((bt, dk, dv), lambda b, t: (b, 0, 0)),
     ]
     out_specs = [
-        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, t, 0)),
-        pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+        pl.BlockSpec((bt, chunk, dv), lambda b, t: (b, t, 0)),
+        pl.BlockSpec((bt, dk, dv), lambda b, t: (b, 0, 0)),
     ]
     out_shape = [
         jax.ShapeDtypeStruct((BH, T, dv), v.dtype),
@@ -287,44 +405,46 @@ def _fwd_call(r, k, v, logw, u, state, chunk, interpret, traj: bool):
     kernel = _kernel
     if traj:
         kernel = _traj_kernel
-        out_specs.append(pl.BlockSpec((1, 1, dk, dv),
+        out_specs.append(pl.BlockSpec((bt, 1, dk, dv),
                                       lambda b, t: (b, t, 0, 0)))
         out_shape.append(jax.ShapeDtypeStruct((BH, nt, dk, dv), jnp.float32))
     return pl.pallas_call(
         kernel,
-        grid=(BH, nt),
+        grid=(BH // bt, nt),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((2, bt, chunk, dk), r.dtype),
+                        pltpu.VMEM((2, bt, chunk, dk), k.dtype),
+                        pltpu.VMEM((2, bt, chunk, dv), v.dtype),
+                        pltpu.VMEM((2, bt, chunk, dk), logw.dtype),
+                        pltpu.VMEM((bt, dk, dv), jnp.float32),
+                        pltpu.SemaphoreType.DMA((4, 2))],
         interpret=interpret,
     )(r, k, v, logw, u, state)
 
 
 def _bwd_call(r, k, v, logw, u, s_traj, dout, ds_fin, s0_dtype, chunk,
-              interpret):
+              bh_tile, interpret):
     BH, T, dk = r.shape
     dv = v.shape[-1]
     nt = T // chunk
+    bt = bh_tile
     rev = nt - 1                              # reversed chunk index map
 
-    in_specs = [
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, dk), lambda b, t: (b, 0)),
-        pl.BlockSpec((1, 1, dk, dv), lambda b, t: (b, rev - t, 0, 0)),
-        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+    in_specs = [_ANY(), _ANY(), _ANY(), _ANY()] + [
+        pl.BlockSpec((bt, dk), lambda b, t: (b, 0)),
+        _ANY(),                               # s_traj streams in reverse
+        _ANY(),                               # dout streams in reverse
+        pl.BlockSpec((bt, dk, dv), lambda b, t: (b, 0, 0)),
     ]
     out_specs = [
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, chunk, dv), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, chunk, dk), lambda b, t: (b, rev - t, 0)),
-        pl.BlockSpec((1, dk), lambda b, t: (b, 0)),
-        pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+        pl.BlockSpec((bt, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((bt, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((bt, chunk, dv), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((bt, chunk, dk), lambda b, t: (b, rev - t, 0)),
+        pl.BlockSpec((bt, dk), lambda b, t: (b, 0)),
+        pl.BlockSpec((bt, dk, dv), lambda b, t: (b, 0, 0)),
     ]
     out_shape = [
         jax.ShapeDtypeStruct(r.shape, r.dtype),
@@ -336,12 +456,19 @@ def _bwd_call(r, k, v, logw, u, s_traj, dout, ds_fin, s0_dtype, chunk,
     ]
     return pl.pallas_call(
         _bwd_kernel,
-        grid=(BH, nt),
+        grid=(BH // bt, nt),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32),
-                        pltpu.VMEM((1, dk), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((2, bt, chunk, dk), r.dtype),
+                        pltpu.VMEM((2, bt, chunk, dk), k.dtype),
+                        pltpu.VMEM((2, bt, chunk, dv), v.dtype),
+                        pltpu.VMEM((2, bt, chunk, dk), logw.dtype),
+                        pltpu.VMEM((2, bt, chunk, dv), dout.dtype),
+                        pltpu.VMEM((2, bt, 1, dk, dv), jnp.float32),
+                        pltpu.VMEM((bt, dk, dv), jnp.float32),
+                        pltpu.VMEM((bt, dk), jnp.float32),
+                        pltpu.SemaphoreType.DMA((6, 2))],
         interpret=interpret,
     )(r, k, v, logw, u, s_traj, dout, ds_fin)
 
@@ -349,20 +476,20 @@ def _bwd_call(r, k, v, logw, u, s_traj, dout, ds_fin, s0_dtype, chunk,
 # ---------------------------------------------------------------------------
 # custom VJP — 1 dispatch fwd, 2 dispatches per value_and_grad
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
-def _wkv6(r, k, v, logw, u, s0, chunk, bwd, interpret):
-    out, s_out = _fwd_call(r, k, v, logw, u, s0, chunk, interpret,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _wkv6(r, k, v, logw, u, s0, chunk, bh_tile, bwd, interpret):
+    out, s_out = _fwd_call(r, k, v, logw, u, s0, chunk, bh_tile, interpret,
                            traj=False)
     return out, s_out
 
 
-def _wkv6_fwd(r, k, v, logw, u, s0, chunk, bwd, interpret):
+def _wkv6_fwd(r, k, v, logw, u, s0, chunk, bh_tile, bwd, interpret):
     if bwd == ORACLE_BWD:
-        out, s_out = _fwd_call(r, k, v, logw, u, s0, chunk, interpret,
-                               traj=False)
+        out, s_out = _fwd_call(r, k, v, logw, u, s0, chunk, bh_tile,
+                               interpret, traj=False)
         return (out, s_out), (r, k, v, logw, u, s0, None)
-    out, s_out, s_traj = _fwd_call(r, k, v, logw, u, s0, chunk, interpret,
-                                   traj=True)
+    out, s_out, s_traj = _fwd_call(r, k, v, logw, u, s0, chunk, bh_tile,
+                                   interpret, traj=True)
     return (out, s_out), (r, k, v, logw, u, s0, s_traj)
 
 
@@ -377,7 +504,7 @@ def _oracle(r, k, v, logw, u, s0, chunk):
     return out.astype(v.dtype), s_out.astype(jnp.float32)
 
 
-def _wkv6_bwd(chunk, bwd, interpret, residuals, cots):
+def _wkv6_bwd(chunk, bh_tile, bwd, interpret, residuals, cots):
     r, k, v, logw, u, s0, s_traj = residuals
     dout, ds_fin = cots
     if bwd == ORACLE_BWD:
@@ -385,24 +512,26 @@ def _wkv6_bwd(chunk, bwd, interpret, residuals, cots):
             lambda *a: _oracle(*a, chunk), r, k, v, logw, u, s0)
         return oracle_vjp((dout, ds_fin))
     return _bwd_call(r, k, v, logw, u, s_traj, dout, ds_fin, s0.dtype,
-                     chunk, interpret)
+                     chunk, bh_tile, interpret)
 
 
 _wkv6.defvjp(_wkv6_fwd, _wkv6_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "bwd", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "bh_tile", "bwd", "interpret"))
 def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
          u: jax.Array, state: jax.Array, *, chunk: int = 32,
-         bwd: int = FUSED_BWD,
+         bh_tile: int = 1, bwd: int = FUSED_BWD,
          interpret: bool = True) -> tuple[jax.Array, jax.Array]:
     """Chunked RWKV6 scan over full sequences — ONE Pallas dispatch.
 
     r, k, logw: (BH, T, dk); v: (BH, T, dv); u: (BH, dk);
-    state: (BH, dk, dv).  Any T — non-dividing sequences are zero-padded to
-    the next chunk multiple (identity on the state: logw = 0, zero kv) and
-    the padded output rows sliced off.  ``chunk`` is clamped to T.
-    Returns (out (BH, T, dv), final state (BH, dk, dv) f32).
+    state: (BH, dk, dv).  Any T and BH — non-dividing axes are zero-padded
+    to the next chunk/bh_tile multiple (identity on the state: logw = 0,
+    zero kv; padded BH rows are fully zero and independent) and the padded
+    output rows sliced off.  ``chunk`` is clamped to T and ``bh_tile`` to
+    BH.  Returns (out (BH, T, dv), final state (BH, dk, dv) f32).
 
     Differentiable: under ``jax.grad`` the forward becomes the
     trajectory-emitting kernel and the backward ONE reverse-sweep dispatch
@@ -412,16 +541,26 @@ def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
     """
     BH, T, dk = r.shape
     chunk = max(1, min(chunk, T))
+    bh_tile = max(1, min(bh_tile, BH))
     from repro.obs import trace as trace_lib
     tracer = trace_lib.get_tracer()
     if tracer.enabled:
         tracer.event("plan/dispatch", family="rwkv6", plan="chunked_scan",
-                     chunk=chunk, bwd=bwd, n_bh=BH, seq_len=T)
+                     chunk=chunk, bh_tile=bh_tile, bwd=bwd, n_bh=BH,
+                     seq_len=T)
     pad = (-T) % chunk
-    if pad:
+    padb = (-BH) % bh_tile
+    if pad or padb:
         def zpad(a):
-            return jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+            return jnp.pad(a, ((0, padb), (0, pad), (0, 0)))
 
         r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
-    out, s_out = _wkv6(r, k, v, logw, u, state, chunk, bwd, interpret)
-    return (out[:, :T] if pad else out), s_out
+        if padb:
+            u = jnp.pad(u, ((0, padb), (0, 0)))
+            state = jnp.pad(state, ((0, padb), (0, 0), (0, 0)))
+    out, s_out = _wkv6(r, k, v, logw, u, state, chunk, bh_tile, bwd,
+                       interpret)
+    if pad or padb:
+        out = out[:BH, :T]
+        s_out = s_out[:BH]
+    return out, s_out

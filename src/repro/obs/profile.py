@@ -140,7 +140,8 @@ class DeviceProfile:
             return cls.from_json(json.load(fh))
 
 
-def profile_families(families: tuple[str, ...] = ("lstm", "rwkv6"), *,
+def profile_families(families: tuple[str, ...] = ("lstm", "rwkv6",
+                                                  "mamba"), *,
                      vmem_budget: int | None = None, repeats: int = 2,
                      warmup: int = 1, max_points: int = 4,
                      hook_kwargs: Mapping[str, dict] | None = None

@@ -1,0 +1,172 @@
+"""Tests on the family-generic tiling substrate (core/tiling.py): the
+working-set-term algebra, the fwd/bwd mode split, and the coarseness-
+ordered joint (batch_tile, time_chunk) search — plus the delegation
+contract: all three family choosers (kernels/lstm_seq.choose_batch_block,
+kernels/wkv6.choose_blocks, kernels/mamba_scan.choose_blocks) are thin
+``fits`` closures over the ONE shared search, so its priority order is
+their priority order."""
+import pytest
+
+from repro.core import tiling
+
+
+# ---------------------------------------------------------------------------
+# residency helpers
+# ---------------------------------------------------------------------------
+def test_check_mode():
+    assert tiling.check_mode("fwd") == "fwd"
+    assert tiling.check_mode("bwd") == "bwd"
+    with pytest.raises(ValueError, match="mode"):
+        tiling.check_mode("train")
+
+
+def test_weight_dtype_bytes_precedence():
+    # explicit override wins over everything
+    assert tiling.weight_dtype_bytes(4, w_dtype_bytes=2) == 2
+    assert tiling.weight_dtype_bytes(4, w_dtype_bytes=2, quantized=True) == 2
+    # quantized plans hold int8 weights
+    assert tiling.weight_dtype_bytes(4, quantized=True) == 1
+    # float plans hold activation-width weights
+    assert tiling.weight_dtype_bytes(4) == 4
+    assert tiling.weight_dtype_bytes(2) == 2
+
+
+def test_streamed_rows():
+    assert tiling.streamed_rows(64, None) == 64          # whole-axis
+    assert tiling.streamed_rows(64, 8) == 2 * 8          # double-buffered
+    assert tiling.streamed_rows(64, 128) == 2 * 64       # clamped to T
+    assert tiling.streamed_rows(64, 8, slots=3) == 24
+
+
+def test_bwd_window_rows_overlap():
+    assert tiling.bwd_window_rows(64, 8) == 9    # one overlap row
+    assert tiling.bwd_window_rows(64, 64) == 64  # single chunk: no overlap
+    assert tiling.bwd_window_rows(64, 128) == 64  # clamp first
+
+
+def test_chunk_grid_arithmetic():
+    assert tiling.ceil_chunks(64, 8) == 8
+    assert tiling.ceil_chunks(61, 8) == 8        # non-dividing tail
+    assert tiling.ceil_chunks(64, 128) == 1      # clamp
+    assert tiling.streamed_axis_rows(64, None) == 64
+    assert tiling.streamed_axis_rows(61, 8) == 64   # tail priced in full
+    assert tiling.pad_tiles(5, 2) == 6
+    assert tiling.pad_tiles(4, 2) == 4
+
+
+# ---------------------------------------------------------------------------
+# WorkingSet: the named-term algebra and the fwd/bwd split
+# ---------------------------------------------------------------------------
+def test_working_set_mode_split():
+    fwd = (tiling.WorkingSet("fwd").add("x", 100)
+           .add("traj", 900, bwd_only=True))
+    bwd = (tiling.WorkingSet("bwd").add("x", 100)
+           .add("traj", 900, bwd_only=True))
+    assert fwd.total() == 100 and "traj" not in fwd.terms
+    assert bwd.total() == 1000 and bwd.terms["traj"] == 900
+    with pytest.raises(ValueError, match="mode"):
+        tiling.WorkingSet("train")
+
+
+def test_working_set_accumulates_by_name():
+    ws = tiling.WorkingSet().add("x", 10).add("x", 5)
+    assert ws.terms == {"x": 15} and ws.total() == 15
+
+
+def test_halving_walk():
+    assert list(tiling.halving(32)) == [32, 16, 8, 4, 2, 1]
+    assert list(tiling.halving(3)) == [3, 1]
+    assert list(tiling.halving(1)) == [1]
+    assert list(tiling.halving(32, floor=8)) == [32, 16, 8]
+
+
+# ---------------------------------------------------------------------------
+# joint_search: MobiRNN coarseness order
+# ---------------------------------------------------------------------------
+def test_joint_search_prefers_whole_t_at_coarsest_tile():
+    calls = []
+
+    def fits(bm, tc):
+        calls.append((bm, tc))
+        return True
+
+    assert tiling.joint_search(8, 64, fits) == (8, None)
+    assert calls == [(8, None)]          # nothing finer was even probed
+
+
+def test_joint_search_streams_before_shrinking_batch():
+    # whole-T never fits, tc=16 fits at the full batch tile: the search
+    # must stream time at the coarse tile, NOT halve the batch tile
+    def fits(bm, tc):
+        return tc is not None and tc <= 16
+    assert tiling.joint_search(8, 64, fits) == (8, 32 // 2)
+
+
+def test_joint_search_halves_batch_last():
+    # only (batch_tile <= 2, tc <= 4) fits: chunk sweep must be exhausted
+    # at each batch tile before the tile halves
+    calls = []
+
+    def fits(bm, tc):
+        calls.append((bm, tc))
+        return bm <= 2 and tc is not None and tc <= 4
+    assert tiling.joint_search(8, 64, fits) == (2, 4)
+    # every chunk candidate at bm=8 ran before any bm=4 candidate
+    assert calls.index((4, None)) > calls.index((8, 1))
+
+
+def test_joint_search_exhaustion_and_flags():
+    assert tiling.joint_search(8, 64, lambda bm, tc: False) is None
+    # allow_chunk=False: whole-axis residency or bust
+    assert tiling.joint_search(
+        8, 64, lambda bm, tc: tc is not None, allow_chunk=False) is None
+    # whole_t_first=False (always-chunked kernels): tc=None never probed
+    def fits(bm, tc):
+        assert tc is not None
+        return True
+    assert tiling.joint_search(
+        8, 64, fits, whole_t_first=False, chunk_start=16) == (8, 16)
+    # seed_batch_tile clamps into [1, batch]
+    assert tiling.joint_search(
+        4, 64, lambda bm, tc: tc is None, seed_batch_tile=99) == (4, None)
+
+
+# ---------------------------------------------------------------------------
+# delegation: the three family choosers ride the one search
+# ---------------------------------------------------------------------------
+def test_lstm_chooser_delegates_to_joint_search():
+    from repro.kernels import lstm_seq
+
+    shape = dict(seq_len=256, n_layers=2, p_width=40, hidden=64)
+    blocks = lstm_seq.choose_batch_block(32, **shape)
+    assert blocks is not None
+
+    def fits(bm, tc):
+        return lstm_seq.working_set_bytes(
+            shape["seq_len"], shape["n_layers"], shape["p_width"],
+            shape["hidden"], bm,
+            time_chunk=tc) <= lstm_seq.factorization.DEFAULT_VMEM_BUDGET
+
+    got = tiling.joint_search(32, shape["seq_len"], fits,
+                              seed_batch_tile=blocks.block_b)
+    assert got == tuple(blocks)
+
+
+def test_wkv6_chooser_is_always_chunked():
+    from repro.kernels import wkv6
+
+    blocks = wkv6.choose_blocks(8, 128, 64, 64, target=32)
+    assert blocks == wkv6.WkvBlocks(32, 8)    # coarsest point, never None-tc
+    # pressure refines (coarseness order: chunk halves before bh tile)
+    ws = wkv6.working_set_bytes(128, 64, 64, 32, bh_tile=8)
+    tight = wkv6.choose_blocks(8, 128, 64, 64, target=32, vmem_budget=ws - 1)
+    assert tight is not None and tuple(tight) != tuple(blocks)
+
+
+def test_mamba_chooser_whole_t_first():
+    from repro.kernels import mamba_scan
+
+    blocks = mamba_scan.choose_blocks(4, 64, 16, 8)
+    assert blocks == mamba_scan.MambaBlocks(4, 64)   # whole-T residency
+    assert mamba_scan.choose_blocks(
+        4, 4096, 4096, 64, vmem_budget=4096) is None

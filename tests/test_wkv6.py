@@ -128,3 +128,60 @@ def test_split_resume_matches_unsplit(split, seed, chunk):
                                np.asarray(out_full), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(s_end), np.asarray(s_full),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# BH tiling: non-dividing batch-head tails against the shared state scratch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bh_tile", [2, 3, 4])
+@pytest.mark.parametrize("chunk", [1, 8, 23])
+def test_bh_tile_forward_bitwise_nondividing_tail(bh_tile, chunk):
+    """Widening the grid's BH axis must not change a single bit of the
+    forward: the per-row unroll inside a tile runs the exact chunk math of
+    the bh_tile=1 sweep, and the zero-padded tail rows (BH=5 divides none
+    of these tiles) write only their own rows of the shared f32 state
+    scratch.  chunk spans C=1 / C | T-ish / C=T over a NON-dividing T=23,
+    so the time padding rides along too."""
+    T, dk, dv, BH = 23, 6, 6, 5
+    args = _inputs(T, dk, dv, seed=7, BH=BH)
+    out1, s1 = wkv6_lib.wkv6(*args, chunk=chunk, bh_tile=1)
+    outn, sn = wkv6_lib.wkv6(*args, chunk=chunk, bh_tile=bh_tile)
+    np.testing.assert_array_equal(np.asarray(outn), np.asarray(out1))
+    np.testing.assert_array_equal(np.asarray(sn), np.asarray(s1))
+
+
+def test_bh_tile_rows_match_independent_single_rows():
+    """Each batch-head row of a tiled run equals its OWN single-row run —
+    the direct statement that the shared (bh_tile, dk, dv) state scratch
+    never leaks across rows, tail rows of a non-dividing BH included."""
+    T, dk, dv, BH = 16, 4, 4, 3
+    r, k, v, logw, u, s0 = _inputs(T, dk, dv, seed=11, BH=BH)
+    out, s_out = wkv6_lib.wkv6(r, k, v, logw, u, s0, chunk=8, bh_tile=2)
+    for i in range(BH):
+        oi, si = wkv6_lib.wkv6(r[i:i + 1], k[i:i + 1], v[i:i + 1],
+                               logw[i:i + 1], u[i:i + 1], s0[i:i + 1],
+                               chunk=8, bh_tile=1)
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(oi[0]))
+        np.testing.assert_array_equal(np.asarray(s_out[i]),
+                                      np.asarray(si[0]))
+
+
+def test_bh_tile_grads_agree_nondividing_tail():
+    """The reverse sweep shares the row layout (per-row vjp over the same
+    chunk math, ds/du scratch rows owned per batch-head), so gradients
+    agree across bh tiles too — to float rounding, not bitwise: different
+    grids are different XLA programs, so fusion may reassociate."""
+    T, dk, dv, BH = 23, 4, 4, 5
+    args = _inputs(T, dk, dv, seed=13, BH=BH)
+
+    def loss(bh_tile, *a):
+        out, s = wkv6_lib.wkv6(*a, chunk=8, bh_tile=bh_tile)
+        return jnp.sum(jnp.tanh(out.astype(jnp.float32))) + jnp.sum(s * s)
+
+    g1 = jax.grad(lambda *a: loss(1, *a), argnums=tuple(range(6)))(*args)
+    for bh_tile in (2, 5):
+        gn = jax.grad(lambda *a: loss(bh_tile, *a),
+                      argnums=tuple(range(6)))(*args)
+        for a, b in zip(gn, g1):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
