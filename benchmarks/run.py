@@ -941,6 +941,122 @@ def bench_obs_smoke(trace_path: str = "BENCH_ci_obs_trace.jsonl",
         f"file={profile_path}")
 
 
+def bench_chaos_smoke(trace_path: str = "BENCH_ci_chaos_trace.jsonl",
+                      faults_path: str = "BENCH_ci_chaos_faults.json"
+                      ) -> None:
+    """CI smoke (fast job): the ISSUE 9 fault-tolerance acceptance, executed.
+
+    Drives a seeded FaultPlan (a NaN-poisoned lane, a failed prefill, a
+    3-tick slow burst) through a SlotEngine with a retry budget and a
+    degradation ladder, and asserts (a) every request terminates with a
+    finish_reason from the closed set; (b) every request that finishes
+    'length' — including the quarantined-then-retried and the
+    prefill-faulted ones — carries tokens bit-identical to a fault-free
+    run; (c) the zero-allocation invariant holds through quarantine and
+    re-admission (pool and scratch buffers_built stay at capacity); (d)
+    the watchdog's plan downshift and the shed decisions are visible in
+    the JSONL trace (serve/fault, serve/quarantine, serve/shed,
+    sched/degrade; post-degrade sched/choose picks the fallback plan).
+    The fault schedule and the trace are written next to the other
+    BENCH_ci_* artifacts so any failure replays exactly.
+    """
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.models import registry
+    from repro.obs import trace as trace_lib
+    from repro.partitioning import split
+    from repro.serving import (FINISH_REASONS, FaultPlan, FinishReason,
+                               LanePoison, PrefillFault, Request, SlotEngine,
+                               SlowTick)
+    from repro import steps as steps_lib
+
+    cfg = dataclasses.replace(
+        get_arch("qwen2-0.5b").reduced(), n_layers=2, d_model=64,
+        n_heads=2, n_kv_heads=1, head_dim=16, d_ff=128, vocab=128)
+    model = registry.build(cfg)
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+    lens, news = (5, 9, 3, 7, 4, 6), (12, 12, 6, 12, 4, 4)
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in lens]
+
+    def reqs(deadline=None):
+        # uids 4-5 carry deadlines ~1000s out: trivially meetable on a
+        # healthy engine, provably unmeetable once the slow burst drives
+        # the tick EMA to ~1e6 s — the shed sweep's targets
+        return [Request(i, p, max_new_tokens=n,
+                        deadline_s=(None if deadline is None or i < 4
+                                    else deadline + i))
+                for i, (p, n) in enumerate(zip(prompts, news))]
+
+    faults = FaultPlan(seed=0, faults=(
+        LanePoison(tick=1, lane=0),
+        PrefillFault(uid=2),
+        SlowTick(tick=4, extra_s=1e6),
+        SlowTick(tick=5, extra_s=1e6),
+        SlowTick(tick=6, extra_s=1e6)))
+    faults.save(faults_path)
+
+    # fault-free reference: what every 'length' finisher must reproduce
+    base_eng = SlotEngine(model, params, n_slots=2, max_seq=64,
+                          queue_capacity=4)
+    base = {r.uid: r.tokens.tolist()
+            for r in base_eng.serve(reqs(base_eng.clock() + 1000.0))}
+
+    old = trace_lib.set_tracer(trace_lib.Tracer(trace_lib.JsonlSink(
+        trace_path)))
+    try:
+        eng = SlotEngine(
+            model, params, n_slots=2, max_seq=64, queue_capacity=4,
+            extra_plans={"decode/fallback":
+                         lambda p, c, b: steps_lib.decode_step(cfg, p, c, b)},
+            faults=faults, retry_budget=1, tick_slo_s=50.0,
+            slo_breach_ticks=3, slo_recover_ticks=99,
+            ladder=["decode/base"])
+        chaos = {r.uid: r for r in eng.serve(reqs(eng.clock() + 1000.0))}
+    finally:
+        trace_lib.get_tracer().close()
+        trace_lib.set_tracer(old)
+
+    # (a) all terminate, closed set; (b) healthy-lane bit-identity
+    assert set(chaos) == set(range(6)), sorted(chaos)
+    assert all(r.finish_reason in FINISH_REASONS for r in chaos.values())
+    reasons = {u: r.finish_reason for u, r in chaos.items()}
+    for uid in (0, 1, 2, 3):
+        assert reasons[uid] == FinishReason.LENGTH, reasons
+        assert chaos[uid].tokens.tolist() == base[uid], \
+            f"uid {uid} diverged from the fault-free run"
+    for uid in (4, 5):
+        assert reasons[uid] == FinishReason.SHED, reasons
+    # (c) zero-alloc through quarantine + re-admission
+    assert eng.pool.stats.buffers_built == 1
+    assert eng._scratch_pool.stats.buffers_built == 1
+    q = eng.metrics.counter("serving/quarantined").value
+    rt = eng.metrics.counter("serving/retries").value
+    sh = eng.metrics.counter("serving/shed").value
+    assert q >= 1 and rt >= 1 and sh >= 1, (q, rt, sh)
+    assert eng.scheduler.level == 1     # degraded, recovery disabled
+
+    # (d) the chaos story is visible in the trace
+    events = trace_lib.read_jsonl(trace_path)
+    kinds = {e["attrs"]["kind"] for e in events
+             if e["name"] == "serve/fault"}
+    assert {"poison", "prefill", "slow"} <= kinds, kinds
+    assert any(e["name"] == "serve/quarantine" for e in events)
+    assert any(e["name"] == "serve/shed" for e in events)
+    degrades = [e for e in events if e["name"] == "sched/degrade"]
+    assert degrades, "watchdog never stepped the ladder"
+    post = [e["attrs"]["plan"] for e in events
+            if e["name"] == "sched/choose" and e["seq"] > degrades[0]["seq"]]
+    assert post and set(post) == {"decode/fallback"}, \
+        f"no downshift after sched/degrade: {post[:5]}"
+    row("chaos_smoke/seeded_faults", float(len(events)),
+        f"quarantined={q},retries={rt},shed={sh},reasons="
+        f"{'|'.join(sorted(set(reasons.values())))},files={faults_path}"
+        f"+{trace_path}")
+
+
 def bench_kernels() -> None:
     from repro.kernels import ops, ref
 
@@ -1072,6 +1188,16 @@ def main() -> None:
                          "ratio; the CI fast-job invocation — writes "
                          "BENCH_ci_obs_trace.jsonl + "
                          "BENCH_ci_obs_profile.json)")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="run only the fault-tolerance smoke (seeded "
+                         "FaultPlan through the SlotEngine: every request "
+                         "terminates inside the closed finish_reason set, "
+                         "healthy lanes bit-identical to the fault-free "
+                         "run, zero-alloc through quarantine/re-admission, "
+                         "ladder downshift + shed visible in the trace; "
+                         "the CI fast-job invocation — writes "
+                         "BENCH_ci_chaos_trace.jsonl + "
+                         "BENCH_ci_chaos_faults.json)")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="enable structured tracing for the whole run and "
                          "write JSONL records (spans/events; see "
@@ -1106,6 +1232,8 @@ def main() -> None:
         bench_mamba_smoke()
     elif args.obs_smoke:
         bench_obs_smoke()
+    elif args.chaos_smoke:
+        bench_chaos_smoke()
     elif args.fig2:
         bench_fig2_dispatch_counts()
         bench_quant_rows()

@@ -139,28 +139,70 @@ class Scheduler:
     MAX_DECISIONS = 4096
 
     def __init__(self, sensor: LoadSensor,
-                 viable: Callable[[str], bool] | None = None):
+                 viable: Callable[[str], bool] | None = None,
+                 ladder: list[str] | None = None):
         import collections
         self.sensor = sensor
         self.viable = viable
         self.plans: dict[str, Plan] = {}
         self.decisions: collections.deque[Decision] = collections.deque(
             maxlen=self.MAX_DECISIONS)
+        #: graceful-degradation ladder: plan names ordered most-expensive
+        #: first.  ``level`` rungs are currently excluded from choose() —
+        #: the serving watchdog steps it via degrade()/recover()
+        self.ladder: list[str] = list(ladder or [])
+        self.level: int = 0
 
     def register(self, plan: Plan) -> None:
         self.plans[plan.name] = plan
 
+    def _demoted(self) -> set[str]:
+        return set(self.ladder[:self.level])
+
     def _viable_plans(self, viable: Callable[[str], bool] | None
                       ) -> dict[str, Plan]:
         pred = self.viable if viable is None else viable
-        if pred is None:
-            return self.plans
-        out = {n: p for n, p in self.plans.items() if pred(n)}
+        demoted = self._demoted()
+        out = {n: p for n, p in self.plans.items()
+               if (pred is None or pred(n)) and n not in demoted}
         if not out:
             raise ValueError(
                 f"no viable plan among {sorted(self.plans)} — the viability "
-                "predicate rejected every registered plan")
+                "predicate (or degradation level "
+                f"{self.level}/{self.ladder}) rejected every registered plan")
         return out
+
+    def degrade(self, reason: str = "slo") -> bool:
+        """Step one rung down the ladder: exclude the next (most expensive
+        still-included) ladder plan from choose()/calibrate().  Refuses —
+        returns False, state unchanged — when the ladder is spent or when
+        stepping down would leave no viable plan; the engine must always
+        have SOMETHING to run, degraded or not."""
+        if self.level >= len(self.ladder):
+            return False
+        self.level += 1
+        try:
+            self._viable_plans(None)
+        except ValueError:
+            self.level -= 1
+            return False
+        tracer = trace_lib.get_tracer()
+        if tracer.enabled:
+            tracer.event("sched/degrade", level=self.level,
+                         excluded=sorted(self._demoted()), reason=reason)
+        return True
+
+    def recover(self) -> bool:
+        """Step one rung back up (re-admit the most recently demoted plan).
+        Returns False at level 0."""
+        if self.level == 0:
+            return False
+        self.level -= 1
+        tracer = trace_lib.get_tracer()
+        if tracer.enabled:
+            tracer.event("sched/recover", level=self.level,
+                         excluded=sorted(self._demoted()))
+        return True
 
     @staticmethod
     def _blocked_call(plan: Plan, args, kwargs):

@@ -1,6 +1,13 @@
 from repro.serving.engine import Engine, SlotEngine
-from repro.serving.slots import (QueueFull, Request, RequestQueue, Result,
-                                 Slot, SlotManager, TokenEvent)
+from repro.serving.faults import (FaultInjector, FaultPlan, InjectedFault,
+                                  LanePoison, PrefillFault, QueueFlood,
+                                  SlowTick)
+from repro.serving.slots import (FINISH_REASONS, FinishReason, QueueFull,
+                                 Request, RequestQueue, Result, Slot,
+                                 SlotManager, TokenEvent)
 
 __all__ = ["Engine", "SlotEngine", "Request", "Result", "RequestQueue",
-           "QueueFull", "Slot", "SlotManager", "TokenEvent"]
+           "QueueFull", "Slot", "SlotManager", "TokenEvent",
+           "FinishReason", "FINISH_REASONS", "FaultPlan", "FaultInjector",
+           "InjectedFault", "LanePoison", "PrefillFault", "SlowTick",
+           "QueueFlood"]

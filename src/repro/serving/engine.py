@@ -41,13 +41,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheduler import Plan, Scheduler, SyntheticLoadSensor
-from repro.core.state import StatePool
+from repro.core.state import StatePool, make_buffer
 from repro.obs import trace as trace_lib
 from repro.obs.metrics import Metrics
 from repro.models.registry import Model
 from repro.partitioning import split
-from repro.serving.slots import (QueueFull, Request, RequestQueue, Result,
-                                 SlotManager, TokenEvent)
+from repro.serving import faults as faults_lib
+from repro.serving.slots import (FinishReason, QueueFull, Request,
+                                 RequestQueue, Result, SlotManager,
+                                 TokenEvent)
 from repro import steps as steps_lib
 
 
@@ -211,10 +213,39 @@ class SlotEngine(_EngineBase):
     compile distinct prefill executables (bucket upstream if that matters).
     """
 
+    #: smoothing for the observed tick-latency EMA the shed predicate and
+    #: watchdog read (matches core.scheduler.Plan.ema)
+    TICK_EMA = 0.3
+
     def __init__(self, model: Model, params: Any, *, n_slots: int = 4,
                  max_seq: int = 128, queue_capacity: int = 16,
                  sensor=None, extra_plans: dict[str, Callable] | None = None,
-                 clock: Callable[[], float] = None):
+                 clock: Callable[[], float] = None,
+                 faults: faults_lib.FaultPlan | None = None,
+                 retry_budget: int = 0, retry_backoff_s: float = 0.0,
+                 tick_slo_s: float | None = None, slo_breach_ticks: int = 3,
+                 slo_recover_ticks: int = 8, shed_margin: float = 1.0,
+                 ladder: list[str] | None = None):
+        """Fault-tolerance knobs (all optional; defaults = prior behaviour):
+
+        ``faults``            seeded chaos schedule (serving/faults.FaultPlan)
+                              threaded into the tick/prefill/watchdog hooks;
+        ``retry_budget``      re-admissions allowed per request after a
+                              quarantine or prefill failure (0 = fail fast
+                              with finish_reason='error');
+        ``retry_backoff_s``   base of the exponential re-admission backoff
+                              (attempt k waits retry_backoff_s * 2**k);
+        ``tick_slo_s``        per-tick latency SLO the watchdog enforces
+                              (None disables the degradation ladder);
+        ``slo_breach_ticks``  consecutive over-SLO ticks before one ladder
+                              step down; ``slo_recover_ticks`` consecutive
+                              healthy ticks before one step back up;
+        ``shed_margin``       multiple of the tick-latency EMA a queued
+                              deadline must clear to survive the (degraded-
+                              mode only) shed sweep;
+        ``ladder``            plan names ordered most-expensive-first, the
+                              rungs Scheduler.degrade() walks down.
+        """
         super().__init__(model, params, batch_size=n_slots, max_seq=max_seq,
                          pool_capacity=1, sensor=sensor,
                          extra_plans=extra_plans, per_lane_pos=True)
@@ -233,6 +264,7 @@ class SlotEngine(_EngineBase):
         # first greedy token, all in one dispatch.
         scratch_abs, _ = split(jax.eval_shape(
             lambda: model.init_cache(1, max_seq)))
+        self._scratch_abs = scratch_abs
         self._scratch_pool = StatePool(scratch_abs, capacity=1)
         self._scratch = self._scratch_pool.checkout()
 
@@ -245,30 +277,57 @@ class SlotEngine(_EngineBase):
         # end-of-stream serve/metrics trace event) always carry the full
         # schema, zero-valued counters included
         for name in ("serving/ticks", "serving/tokens", "serving/retired",
-                     "serving/deadline_miss"):
+                     "serving/deadline_miss", "serving/quarantined",
+                     "serving/retries", "serving/shed"):
             self.metrics.counter(name)
         self.metrics.histogram("serving/ttft_s")
         self.metrics.histogram("serving/tbt_s")
 
+        token_tail = ((self.cfg.n_codebooks,) if self.cfg.n_codebooks
+                      else ())
         self._prefill_sample = jax.jit(prefill_sample, donate_argnums=(1,))
         self.manager = SlotManager(
-            self.pool.checkout(), n_slots,
-            token_tail=((self.cfg.n_codebooks,) if self.cfg.n_codebooks
-                        else ()),
+            self.pool.checkout(), n_slots, token_tail=token_tail,
             clock=self.clock)
+
+        # -- fault tolerance ------------------------------------------------
+        unknown = set(ladder or []) - set(self.scheduler.plans)
+        if unknown:
+            raise ValueError(
+                f"ladder names unregistered plans: {sorted(unknown)}")
+        self.scheduler.ladder = list(ladder or [])
+        self.retry_budget = retry_budget
+        self.retry_backoff_s = retry_backoff_s
+        self.tick_slo_s = tick_slo_s
+        self.slo_breach_ticks = slo_breach_ticks
+        self.slo_recover_ticks = slo_recover_ticks
+        self.shed_margin = shed_margin
+        self.injector = None if faults is None else faults_lib.FaultInjector(
+            faults, n_slots, vocab=self.cfg.vocab, max_seq=max_seq,
+            token_tail=token_tail)
+        # the all-False poison mask is uploaded ONCE and reused every
+        # healthy tick, so the guard keeps the no-per-tick-upload property;
+        # a real mask is uploaded only on the fault ticks themselves
+        self._no_poison = jnp.zeros((n_slots,), bool)
+        self._attempts: dict[int, int] = {}   # uid -> retries consumed
+        self._retry_backlog: list[tuple[float, Request]] = []
+        self._tick_ema: float | None = None
+        self._breach_ticks = 0
+        self._healthy_ticks = 0
 
     def _decode_plans(self, extra: dict[str, Callable]
                       ) -> dict[str, Callable]:
         # every plan is wrapped with the active-mask select (free/finished
-        # lanes keep their state untouched) AND greedy sampling, so one
-        # dispatch per tick yields (sampled tokens, cache) directly
+        # lanes keep their state untouched), the per-lane finite guard and
+        # greedy sampling, so one dispatch per tick yields
+        # (sampled tokens, lane_ok, cache) directly
         def masked(fn=None):
             def plan(p, c, b):
                 step = None if fn is None else (
                     lambda _cfg, p_, c_, b_: fn(p_, c_, b_))
-                logits, cache = steps_lib.masked_decode_step(
+                logits, lane_ok, cache = steps_lib.guarded_decode_step(
                     self.cfg, p, c, b, step_fn=step)
-                return steps_lib.greedy_sample(logits), cache
+                return steps_lib.greedy_sample(logits), lane_ok, cache
             return plan
 
         plans = {"decode/base": masked()}
@@ -292,11 +351,18 @@ class SlotEngine(_EngineBase):
                 f"request {req.uid}: prompt {s} + max_new_tokens "
                 f"{req.max_new_tokens} - 1 exceeds max_seq {self.max_seq}")
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
         """Queue one request; raises QueueFull (backpressure) when bounded
-        queue capacity is reached, ValueError when it cannot fit a lane."""
+        queue capacity is reached, ValueError when it cannot fit a lane.
+        Returns False — with an immediate ``finish_reason='deadline'``
+        Result published to ``finished`` — when the request is dead on
+        arrival (its deadline already passed)."""
         self._validate(req)
-        self.queue.submit(req)
+        if not self.queue.submit(req):
+            self.metrics.counter("serving/deadline_miss").inc()
+            self._terminal(req, FinishReason.DEADLINE)
+            return False
+        return True
 
     def _admit_one(self, index: int, req: Request) -> TokenEvent:
         prompt = np.asarray(req.prompt, np.int32)
@@ -319,9 +385,86 @@ class SlotEngine(_EngineBase):
         return TokenEvent(req.uid, tok0_np, 0,
                           done=(req.max_new_tokens <= 1))
 
-    def _expired_event(self, req: Request) -> TokenEvent:
-        return TokenEvent(req.uid, None, 0, done=True,
-                          finish_reason="deadline")
+    # -- fault-tolerance plumbing --------------------------------------
+    def _terminal(self, req: Request, reason: str) -> TokenEvent:
+        """Publish a tokenless terminal Result (queue expiry, dead-on-
+        arrival deadline, shed, failure out of retries) and return its
+        stream event."""
+        self._attempts.pop(req.uid, None)
+        self.finished[req.uid] = Result(req.uid, self.manager.empty_tokens(),
+                                        0.0, 0.0, [], finish_reason=reason)
+        return TokenEvent(req.uid, None, 0, done=True, finish_reason=reason)
+
+    def _finish(self, res: Result) -> None:
+        """Adopt a retired lane's Result — the one place lane retirement
+        updates the metrics and retry bookkeeping."""
+        self.metrics.counter("serving/retired").inc()
+        self._attempts.pop(res.uid, None)
+        self.finished[res.uid] = res
+
+    def _fail_or_retry(self, req: Request, now: float) -> str | None:
+        """Shared quarantine / prefill-failure disposition.  Consumes one
+        unit of ``retry_budget`` when available: the request re-enters the
+        queue after exponential backoff (``retry_backoff_s * 2**attempt``)
+        and restarts FROM PREFILL — a retried greedy request therefore
+        still produces exactly its fault-free tokens.  Returns None on
+        retry, otherwise the terminal finish_reason (ERROR with no budget,
+        RETRIES_EXHAUSTED once the budget is spent)."""
+        attempts = self._attempts.get(req.uid, 0)
+        if attempts < self.retry_budget:
+            self._attempts[req.uid] = attempts + 1
+            self.metrics.counter("serving/retries").inc()
+            ready = now + self.retry_backoff_s * (2.0 ** attempts)
+            self._retry_backlog.append((ready, req))
+            return None
+        return (FinishReason.RETRIES_EXHAUSTED if self.retry_budget > 0
+                else FinishReason.ERROR)
+
+    def _prefill_failed(self, req: Request, now: float, err: Exception
+                        ) -> Iterator[TokenEvent]:
+        """Containment for an admission prefill that raised: emit the
+        serve/fault event, then retry or terminate the request."""
+        injected = isinstance(err, faults_lib.InjectedFault)
+        if not injected and any(
+                getattr(a, "is_deleted", lambda: False)()
+                for a in jax.tree.leaves(self._scratch)):
+            # a REAL prefill exception may have consumed the donated
+            # scratch mid-dispatch; rebuild it so the next admission still
+            # works.  Injected faults raise before the dispatch and never
+            # take this path, so chaos runs stay zero-allocation.
+            self._scratch = make_buffer(self._scratch_abs)
+        tracer = trace_lib.get_tracer()
+        if tracer.enabled:
+            tracer.event("serve/fault", kind="prefill", uid=req.uid,
+                         injected=injected, error=repr(err))
+        reason = self._fail_or_retry(req, now)
+        if reason is not None:
+            yield self._terminal(req, reason)
+
+    def _watchdog(self, observed_s: float, tick: int) -> None:
+        """Tick-latency watchdog driving the degradation ladder: after
+        ``slo_breach_ticks`` consecutive ticks over ``tick_slo_s`` the
+        scheduler steps one rung down (sched/degrade in the trace); after
+        ``slo_recover_ticks`` consecutive healthy ticks it steps back up."""
+        ema = self._tick_ema
+        self._tick_ema = (observed_s if ema is None else
+                          (1 - self.TICK_EMA) * ema
+                          + self.TICK_EMA * observed_s)
+        if self.tick_slo_s is None:
+            return
+        if observed_s > self.tick_slo_s:
+            self._breach_ticks += 1
+            self._healthy_ticks = 0
+            if self._breach_ticks >= self.slo_breach_ticks:
+                self.scheduler.degrade(reason=f"tick_slo@{tick}")
+                self._breach_ticks = 0
+        else:
+            self._breach_ticks = 0
+            self._healthy_ticks += 1
+            if (self.scheduler.level > 0
+                    and self._healthy_ticks >= self.slo_recover_ticks):
+                self.scheduler.recover()
+                self._healthy_ticks = 0
 
     def stream(self, requests: list[Request] | None = None
                ) -> Iterator[TokenEvent]:
@@ -337,32 +480,83 @@ class SlotEngine(_EngineBase):
         pending = collections.deque(requests or [])
         mgr = self.manager
         metrics = self.metrics
+        inj = self.injector
         tick = 0
-        while pending or len(self.queue) or mgr.any_occupied:
+        while (pending or len(self.queue) or mgr.any_occupied
+               or self._retry_backlog):
             now = self.clock()
+            tracer = trace_lib.get_tracer()
+
+            # injected queue floods land first: synthetic dead weight
+            # competing with real work for bounded queue space.  A flood
+            # bouncing off a full queue is the defined behaviour
+            # (backpressure), same as a rejected client — dropped, not
+            # tracked.
+            if inj is not None:
+                for req in inj.flood_requests(tick, now):
+                    if tracer.enabled:
+                        tracer.event("serve/fault", kind="flood", tick=tick,
+                                     uid=req.uid)
+                    try:
+                        if not self.queue.submit(req, now=now):
+                            metrics.counter("serving/deadline_miss").inc()
+                            yield self._terminal(req, FinishReason.DEADLINE)
+                    except QueueFull:
+                        pass
+
+            # quarantined requests whose backoff elapsed re-enter the
+            # queue (ahead of fresh `pending` work — they were admitted
+            # once already)
+            if self._retry_backlog:
+                still: list[tuple[float, Request]] = []
+                for ready_t, req in self._retry_backlog:
+                    if ready_t > now or self.queue.full:
+                        still.append((ready_t, req))
+                    elif not self.queue.submit(req, now=now):
+                        metrics.counter("serving/deadline_miss").inc()
+                        yield self._terminal(req, FinishReason.DEADLINE)
+                self._retry_backlog = still
 
             def refill_and_expire():
                 """Top the queue up from `pending`, then drop anything whose
                 deadline already passed — every pop below sees an expired-
-                free queue, including mid-admission refills."""
+                free queue, including mid-admission refills.  A pending
+                request dead on arrival terminates immediately without
+                queueing."""
                 while pending and not self.queue.full:
-                    self.queue.submit(pending.popleft())
+                    req = pending.popleft()
+                    if not self.queue.submit(req, now=now):
+                        metrics.counter("serving/deadline_miss").inc()
+                        yield self._terminal(req, FinishReason.DEADLINE)
                 for req in self.queue.expire(now):
                     metrics.counter("serving/deadline_miss").inc()
-                    self.finished[req.uid] = Result(
-                        req.uid, mgr.empty_tokens(), 0.0, 0.0, [],
-                        finish_reason="deadline")
-                    yield self._expired_event(req)
+                    yield self._terminal(req, FinishReason.DEADLINE)
 
             yield from refill_and_expire()
             # resident lanes past their deadline retire with what they have
             for idx in mgr.expired_indices(now):
-                res = mgr.retire(idx, finish_reason="deadline")
+                res = mgr.retire(idx, finish_reason=FinishReason.DEADLINE)
                 metrics.counter("serving/deadline_miss").inc()
-                metrics.counter("serving/retired").inc()
-                self.finished[res.uid] = res
+                self._finish(res)
                 yield TokenEvent(res.uid, None, res.tokens.shape[-1],
-                                 done=True, finish_reason="deadline")
+                                 done=True,
+                                 finish_reason=FinishReason.DEADLINE)
+
+            # degradation ladder, shed half: once degraded, queued requests
+            # whose deadlines are provably unmeetable under the observed
+            # tick latency are dropped now instead of wasting lane time
+            # before expiring anyway
+            if self.scheduler.level > 0 and self._tick_ema is not None:
+                horizon = now + self.shed_margin * self._tick_ema
+                for req in self.queue.shed(
+                        lambda r: r.deadline_s is not None
+                        and r.deadline_s <= horizon):
+                    metrics.counter("serving/shed").inc()
+                    if tracer.enabled:
+                        tracer.event("serve/shed", uid=req.uid, tick=tick,
+                                     deadline_s=req.deadline_s,
+                                     tick_ema_s=self._tick_ema)
+                    yield self._terminal(req, FinishReason.SHED)
 
             # step-granular admission into free slots
             for idx in mgr.free_indices():
@@ -375,14 +569,22 @@ class SlotEngine(_EngineBase):
                     self.finished[req.uid] = Result(
                         req.uid, mgr.empty_tokens(), 0.0, 0.0, [])
                     yield TokenEvent(req.uid, None, 0, done=True,
-                                     finish_reason="length")
+                                     finish_reason=FinishReason.LENGTH)
                     continue
-                ev = self._admit_one(idx, req)
+                try:
+                    if inj is not None and inj.take_prefill_fault(req.uid):
+                        # raised BEFORE the dispatch: the donated scratch
+                        # is untouched, exactly the guarantee InjectedFault
+                        # documents
+                        raise faults_lib.InjectedFault(
+                            f"injected prefill fault, uid={req.uid}")
+                    ev = self._admit_one(idx, req)
+                except Exception as err:  # containment: never escapes
+                    yield from self._prefill_failed(req, now, err)
+                    continue
                 yield ev
                 if ev.done:
-                    res = mgr.retire(idx)
-                    metrics.counter("serving/retired").inc()
-                    self.finished[res.uid] = res
+                    self._finish(mgr.retire(idx))
 
             queue_depth = len(self.queue)
             occupied = sum(1 for s in mgr.slots if s.occupied)
@@ -390,29 +592,76 @@ class SlotEngine(_EngineBase):
             metrics.gauge("serving/occupancy").set(occupied / mgr.n_slots)
 
             if not mgr.active_mask().any():
-                if pending or len(self.queue):
-                    continue   # only expiries/zero-token admissions left
+                if pending or len(self.queue) or self._retry_backlog:
+                    # only expiries/zero-token admissions/backoffs left;
+                    # a pending-only backoff spins on the clock until ready
+                    continue
                 break
 
             # ONE fused masked decode tick across all lanes — the span
             # wraps choose + dispatch + host copy, so the per-tick
             # sched/choose event nests under serve/tick in the trace
-            tracer = trace_lib.get_tracer()
             span = (tracer.span("serve/tick", tick=tick,
                                 queue_depth=queue_depth, occupied=occupied)
                     if tracer.enabled else trace_lib.NULL_SPAN)
             with span:
                 d = self.scheduler.choose()
                 plan = self.scheduler.plans[d.plan]
+                batch = mgr.tick_batch()
+                lanes = inj.poison_lanes(tick) if inj is not None else ()
+                if lanes:
+                    mask = np.zeros((self.n_slots,), bool)
+                    mask[list(lanes)] = True
+                    batch["poison"] = jnp.asarray(mask)
+                    if tracer.enabled:
+                        for lane in lanes:
+                            tracer.event("serve/fault", kind="poison",
+                                         tick=tick, lane=lane)
+                else:
+                    batch["poison"] = self._no_poison
                 t0 = time.perf_counter()
-                sampled_dev, mgr.cache = plan.fn(self.params, mgr.cache,
-                                                 mgr.tick_batch())
+                sampled_dev, lane_ok_dev, mgr.cache = plan.fn(
+                    self.params, mgr.cache, batch)
                 mgr.set_sampled(sampled_dev)
                 sampled = np.asarray(sampled_dev)  # blocks; 1 copy per tick
+                lane_ok = np.asarray(lane_ok_dev)
                 tick_s = time.perf_counter() - t0
-                plan.observe(tick_s, d.load)
-                span.set(plan=d.plan, load=d.load, tick_s=tick_s)
+                extra_s = inj.slow_s(tick) if inj is not None else 0.0
+                if extra_s and tracer.enabled:
+                    tracer.event("serve/fault", kind="slow", tick=tick,
+                                 extra_s=extra_s)
+                observed_s = tick_s + extra_s
+                plan.observe(observed_s, d.load)
+                span.set(plan=d.plan, load=d.load, tick_s=tick_s,
+                         observed_s=observed_s)
             metrics.counter("serving/ticks").inc()
+            self._watchdog(observed_s, tick)
+
+            # quarantine: any ACTIVE lane whose finite guard tripped
+            # retires NOW, before its poisoned token could be recorded —
+            # the donated lane reset inside retire() zeroes just that
+            # lane, so its neighbours and the zero-allocation invariant
+            # are untouched
+            for s in [s for s in mgr.slots
+                      if s.occupied and not lane_ok[s.index]]:
+                req = s.request
+                metrics.counter("serving/quarantined").inc()
+                reason = self._fail_or_retry(req, now)
+                res = mgr.retire(s.index,
+                                 finish_reason=reason or FinishReason.ERROR)
+                if tracer.enabled:
+                    tracer.event("serve/quarantine", uid=req.uid,
+                                 slot=s.index, tick=tick,
+                                 action="retry" if reason is None
+                                 else reason)
+                if reason is None:
+                    # retry path: partial output discarded — the retry
+                    # restarts from prefill and regenerates the same
+                    # greedy tokens
+                    continue
+                self._finish(res)
+                yield TokenEvent(req.uid, None, res.tokens.shape[-1],
+                                 done=True, finish_reason=reason)
             tick += 1
 
             just_active = [s.index for s in mgr.slots
@@ -429,9 +678,7 @@ class SlotEngine(_EngineBase):
                                                            np.int32),
                                  len(s.tokens) - 1, done=idx in done_idx)
             for idx in done_idx:
-                res = mgr.retire(idx)
-                metrics.counter("serving/retired").inc()
-                self.finished[res.uid] = res
+                self._finish(mgr.retire(idx))
 
         # one summary record per drained stream: every counter (including
         # zero-valued deadline_miss), gauge and histogram summary

@@ -48,6 +48,35 @@ class QueueFull(RuntimeError):
     """Bounded-queue backpressure: the caller must retry or shed load."""
 
 
+class FinishReason:
+    """The CLOSED set of terminal request states.  Every Result carries
+    exactly one of these (validated in ``Result.__post_init__``) — the
+    fault-tolerance contract is that a request always terminates with a
+    DEFINITE reason, never a stringly-typed ad-hoc label:
+
+      * ``LENGTH``            — produced its full ``max_new_tokens`` budget;
+      * ``DEADLINE``          — ``deadline_s`` passed (queued: zero tokens;
+                                resident: whatever it produced so far);
+      * ``ERROR``             — lane quarantined (non-finite decode output)
+                                or prefill failure, with no retry budget;
+      * ``RETRIES_EXHAUSTED`` — quarantined/failed more times than the
+                                engine's ``retry_budget`` allowed;
+      * ``SHED``              — dropped from the queue by the degradation
+                                ladder: its deadline was provably unmeetable
+                                under the observed tick latency.
+    """
+    LENGTH = "length"
+    DEADLINE = "deadline"
+    ERROR = "error"
+    RETRIES_EXHAUSTED = "retries_exhausted"
+    SHED = "shed"
+
+
+FINISH_REASONS = frozenset({
+    FinishReason.LENGTH, FinishReason.DEADLINE, FinishReason.ERROR,
+    FinishReason.RETRIES_EXHAUSTED, FinishReason.SHED})
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -67,11 +96,17 @@ class Result:
     prefill_s: float
     decode_s: float
     plan_decisions: list[str]
-    finish_reason: str = "length"    # 'length' | 'deadline'
+    finish_reason: str = FinishReason.LENGTH   # one of FINISH_REASONS
     #: admission -> first sampled token available on host, seconds.
     #: 0.0 for requests that never reached a lane (queue expiry,
     #: zero-token budgets) — mirrors prefill_s there.
     ttft_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.finish_reason not in FINISH_REASONS:
+            raise ValueError(
+                f"finish_reason {self.finish_reason!r} outside the closed "
+                f"set {sorted(FINISH_REASONS)}")
 
 
 @dataclasses.dataclass
@@ -100,12 +135,23 @@ class RequestQueue:
     def full(self) -> bool:
         return len(self._q) >= self.capacity
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, now: float | None = None) -> bool:
+        """Queue one request.  Returns True when queued; False when the
+        request is dead on arrival — its ``deadline_s`` has ALREADY passed,
+        so queueing it would be dead work that only surfaces at the next
+        tick's expiry sweep (the caller publishes the immediate
+        ``finish_reason='deadline'`` Result).  Raises QueueFull
+        (backpressure) when the bounded capacity is reached."""
+        if req.deadline_s is not None:
+            now = self.clock() if now is None else now
+            if req.deadline_s <= now:
+                return False
         if self.full:
             raise QueueFull(
                 f"RequestQueue full (capacity={self.capacity}); "
                 "slot-resident serving bounds queued work — retry later")
         self._q.append(req)
+        return True
 
     def expire(self, now: float | None = None) -> list[Request]:
         """Remove and return every queued request whose deadline passed.
@@ -122,6 +168,17 @@ class RequestQueue:
                 keep.append(r)
         self._q = keep
         return expired
+
+    def shed(self, predicate: Callable[[Request], bool]) -> list[Request]:
+        """Remove and return every queued request ``predicate`` marks as
+        sheddable (the degradation ladder's provably-unmeetable sweep).
+        Same identity-partitioned single pass as ``expire``."""
+        dropped: list[Request] = []
+        keep: collections.deque[Request] = collections.deque()
+        for r in self._q:
+            (dropped if predicate(r) else keep).append(r)
+        self._q = keep
+        return dropped
 
     def pop(self) -> Request | None:
         return self._q.popleft() if self._q else None
@@ -228,7 +285,8 @@ class SlotManager:
         s.plan_decisions = []
         return s
 
-    def retire(self, index: int, finish_reason: str = "length") -> Result:
+    def retire(self, index: int,
+               finish_reason: str = FinishReason.LENGTH) -> Result:
         """Reset ONE lane in place and free the slot for the next request."""
         s = self.slots[index]
         assert s.occupied, index

@@ -100,5 +100,35 @@ def masked_decode_step(cfg: ModelConfig, params: Any, cache: Any,
     return logits, {"pos": pos, "slots": slots}
 
 
+def guarded_decode_step(cfg: ModelConfig, params: Any, cache: Any,
+                        batch: dict, step_fn: Any = None
+                        ) -> tuple[jax.Array, jax.Array, Any]:
+    """``masked_decode_step`` plus the per-lane finite guard — the serving
+    fault path's device half, folded into the SAME jit as the tick (one
+    extra reduction, no extra dispatch, no shape change).
+
+    ``batch['poison']`` is an optional (B,) bool fault-injection hook
+    (serving/faults.FaultPlan): poisoned lanes' logits are overwritten with
+    NaN INSIDE the jit, exercising exactly the guard a genuinely non-finite
+    lane would trip.  Returns ``(logits, lane_ok, new_cache)`` where
+    ``lane_ok`` is (B,) bool — False iff an ACTIVE lane produced non-finite
+    logits this tick (inactive lanes carry garbage logits by design and
+    never report faults).  With an all-False poison mask the logits are
+    bit-identical to the unguarded tick: ``where`` with a false mask and
+    the ``isfinite`` reduction change no values.
+    """
+    active = batch["active"]
+    poison = batch.get("poison")
+    logits, new_cache = masked_decode_step(
+        cfg, params, cache,
+        {k: v for k, v in batch.items() if k != "poison"}, step_fn=step_fn)
+    if poison is not None:
+        m = poison.reshape((-1,) + (1,) * (logits.ndim - 1))
+        logits = jnp.where(m, jnp.asarray(jnp.nan, logits.dtype), logits)
+    finite = jnp.all(jnp.isfinite(logits),
+                     axis=tuple(range(1, logits.ndim)))
+    return logits, finite | ~active, new_cache
+
+
 def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -71,22 +71,27 @@ def test_queue_expiry_with_duplicate_uids_and_equal_prompts():
     ndarray prompts would raise 'truth value of an array is ambiguous'."""
     clock = FakeClock()
     q = RequestQueue(capacity=4, clock=clock)
-    q.submit(Request(5, np.array([1, 2, 3], np.int32)))
-    q.submit(Request(5, np.array([1, 2, 3], np.int32), deadline_s=0.5))
-    expired = q.expire()
-    assert len(expired) == 1 and expired[0].deadline_s == 0.5
+    # no deadline -> no clock call; the second submit sees clock=1.0, so a
+    # deadline of 1.5 is still live at submit but dead at the expire sweep
+    assert q.submit(Request(5, np.array([1, 2, 3], np.int32)))
+    assert q.submit(Request(5, np.array([1, 2, 3], np.int32), deadline_s=1.5))
+    expired = q.expire()                                  # clock -> 2.0
+    assert len(expired) == 1 and expired[0].deadline_s == 1.5
     assert len(q) == 1 and q.pop().deadline_s is None
 
 
 def test_queue_deadline_expiry():
     clock = FakeClock()
     q = RequestQueue(capacity=4, clock=clock)
-    q.submit(Request(0, np.array([1], np.int32), deadline_s=0.5))   # past
-    q.submit(Request(1, np.array([2], np.int32), deadline_s=100.0))
-    q.submit(Request(2, np.array([3], np.int32)))                   # none
-    expired = q.expire()
-    assert [r.uid for r in expired] == [0]
-    assert len(q) == 2 and q.pop().uid == 1
+    # already-passed deadline is dead on arrival: rejected at submit (no
+    # dead work queued until the next expiry sweep), False returned
+    assert not q.submit(Request(0, np.array([1], np.int32), deadline_s=0.5))
+    assert len(q) == 0
+    assert q.submit(Request(1, np.array([2], np.int32), deadline_s=2.5))
+    assert q.submit(Request(2, np.array([3], np.int32)))            # none
+    expired = q.expire()                                  # clock -> 3.0
+    assert [r.uid for r in expired] == [1]
+    assert len(q) == 1 and q.pop().uid == 2
 
 
 # ---------------------------------------------------------------------------
