@@ -34,7 +34,8 @@ from repro.configs import get_arch
 from repro.core.scheduler import SyntheticLoadSensor
 from repro.models import registry
 from repro.partitioning import split
-from repro.serving import (Engine, FaultPlan, QueueFull, Request, SlotEngine)
+from repro.serving import (Engine, EngineConfig, FaultPlan, QueueFull,
+                           Request, SlotEngine)
 
 
 def make_requests(cfg, rng):
@@ -63,12 +64,14 @@ def run_chaos(cfg, model, params) -> None:
     # small queue ON PURPOSE: the client below must hit QueueFull and
     # back off, which is the intended reaction to engine backpressure
     engine = SlotEngine(
-        model, params, n_slots=2, max_seq=64, queue_capacity=3,
+        model, params,
+        config=EngineConfig(
+            n_slots=2, max_seq=64, queue_capacity=3,
+            faults=plan, retry_budget=1, retry_backoff_s=0.005,
+            tick_slo_s=50.0, slo_breach_ticks=3, slo_recover_ticks=8,
+            ladder=["decode/base"]),
         extra_plans={"decode/fallback":
-                     lambda p, c, b: steps_lib.decode_step(cfg, p, c, b)},
-        faults=plan, retry_budget=1, retry_backoff_s=0.005,
-        tick_slo_s=50.0, slo_breach_ticks=3, slo_recover_ticks=8,
-        ladder=["decode/base"])
+                     lambda p, c, b: steps_lib.decode_step(cfg, p, c, b)})
 
     pending = collections.deque(reqs)
     backoff_s, backoffs = 0.005, 0
@@ -144,10 +147,10 @@ def main() -> None:
     n_tok = sum(r.max_new_tokens for r in reqs)
 
     sensor = SyntheticLoadSensor(0.0)
-    wave = Engine(model, params, batch_size=4, max_seq=64,
-                  pool_capacity=2, sensor=sensor)
-    slot = SlotEngine(model, params, n_slots=4, max_seq=64,
-                      queue_capacity=8, sensor=sensor)
+    wave = Engine(model, params, sensor=sensor, config=EngineConfig(
+        n_slots=4, max_seq=64, pool_capacity=2))
+    slot = SlotEngine(model, params, sensor=sensor, config=EngineConfig(
+        n_slots=4, max_seq=64, queue_capacity=8))
 
     wave.serve(reqs)                   # compile both engines once so the
     slot.serve(reqs)                   # printed rows are steady-state

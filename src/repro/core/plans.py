@@ -477,6 +477,26 @@ def _rwkv_grads(plan: str, inputs):
         r, k, v, logw, u, state)
 
 
+def _plan_viable(blocks, gated_plan_names: tuple[str, ...]
+                 ) -> Callable[[str], bool]:
+    """The shared viability closure every family factory returns: the
+    accelerator plan(s) in ``gated_plan_names`` are real plans only when
+    the family's tiling decision found a fit; every other plan name stays
+    viable (the CPU-path fallbacks).  ``blocks`` must be the family's
+    decision result — any ``core/tiling.TilePlan`` (SeqBlocks / WkvBlocks /
+    MambaBlocks through their common ``batch_tile``/``time_chunk``
+    accessors) or None; the isinstance assert is what keeps a new family
+    from wiring a bespoke result type past the shared interface."""
+    from repro.core import tiling
+
+    assert blocks is None or isinstance(blocks, tiling.TilePlan), blocks
+
+    def viable(plan_name: str) -> bool:
+        return blocks is not None or plan_name not in gated_plan_names
+
+    return viable
+
+
 def rwkv_viability(seq_len: int, dk: int, dv: int, *, chunk: int = 32,
                    dtype_bytes: int = 4, vmem_budget: int | None = None,
                    train: bool = False,
@@ -484,21 +504,17 @@ def rwkv_viability(seq_len: int, dk: int, dv: int, *, chunk: int = 32,
                    ) -> Callable[[str], bool]:
     """Fig 7 ``viable=`` predicate for the rwkv6 family, from the
     kernels/wkv6 working-set model: the Pallas plan is only a real plan
-    while ``choose_chunk`` finds a chunk whose (C, C, dk) intra-chunk
+    while ``choose_blocks`` finds a chunk whose (C, C, dk) intra-chunk
     tensor plus tiles fit the budget — ``train=True`` sizes the
     reverse-sweep backward instead (~3x), exactly like the lstm family's
     ``plan_viability(train=True)``.  All other plan names stay viable
     (stepwise/chunked_xla are the CPU-path fallbacks)."""
     from repro.kernels import wkv6 as wkv6_lib
 
-    blocks = wkv6_lib.choose_chunk(
-        seq_len, dk, dv, target=chunk, dtype_bytes=dtype_bytes,
+    blocks = wkv6_lib.choose_blocks(
+        1, seq_len, dk, dv, target=chunk, dtype_bytes=dtype_bytes,
         vmem_budget=vmem_budget, mode="bwd" if train else "fwd")
-
-    def viable(plan_name: str) -> bool:
-        return blocks is not None or plan_name not in scan_plan_names
-
-    return viable
+    return _plan_viable(blocks, scan_plan_names)
 
 
 def _rwkv_profile_candidates(*, vmem_budget: int | None = None,
@@ -670,11 +686,7 @@ def mamba_viability(batch: int, seq_len: int, d_inner: int, d_state: int,
     blocks = ms_lib.choose_blocks(
         batch, seq_len, d_inner, d_state, dtype_bytes=dtype_bytes,
         vmem_budget=vmem_budget, mode="bwd" if train else "fwd")
-
-    def viable(plan_name: str) -> bool:
-        return blocks is not None or plan_name not in scan_plan_names
-
-    return viable
+    return _plan_viable(blocks, scan_plan_names)
 
 
 def _mamba_profile_candidates(*, vmem_budget: int | None = None,

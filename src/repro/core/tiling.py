@@ -34,11 +34,37 @@ ROADMAP §Tiling substrate holds the terms-x-family decision table.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator
+from typing import Callable, Iterator, Protocol, runtime_checkable
 
 #: Streamed axes are double-buffered: one window computes while the next
 #: prefetches (kernels/lstm_seq._x_chunk_dma and the wkv6/mamba analogues).
 STREAM_SLOTS = 2
+
+
+@runtime_checkable
+class TilePlan(Protocol):
+    """The ONE interface every family's tiling result presents.
+
+    ``joint_search`` returns a raw ``(batch_tile, time_chunk)`` pair; each
+    family wraps it in its own NamedTuple with family-flavoured field names
+    (``SeqBlocks.block_b``, ``WkvBlocks.bh_tile``, ``MambaBlocks.block_b``).
+    Family-generic consumers — the ``plans.py`` viability factories, the
+    analysis rooflines, anything that only needs "how coarse is the batch
+    axis, how is time streamed" — go through these two accessors instead
+    of the per-family spellings:
+
+    * ``batch_tile`` — rows of the batch-like axis per grid step (batch
+      for LSTM/Mamba, fused B*H heads for WKV6);
+    * ``time_chunk`` — streamed time-window length, or None for whole-axis
+      residency (the LSTM no-streaming fast path; the always-chunked
+      wkv6/mamba grids never return None).
+    """
+
+    @property
+    def batch_tile(self) -> int: ...
+
+    @property
+    def time_chunk(self) -> int | None: ...
 
 
 def check_mode(mode: str) -> str:

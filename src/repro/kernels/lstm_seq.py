@@ -119,9 +119,17 @@ class SeqBlocks(NamedTuple):
     the whole trajectories) stay VMEM-resident for the grid step — the
     fastest layout when it fits.  An integer ``time_chunk=tc`` means the
     kernel streams the time axis through double-buffered (tc, bm, P) VMEM
-    buffers instead, making residency O(tc) in sequence length."""
+    buffers instead, making residency O(tc) in sequence length.
+
+    Presents the family-generic ``core/tiling.TilePlan`` interface:
+    ``batch_tile`` is this family's ``block_b``; ``time_chunk`` is already
+    the shared spelling."""
     block_b: int
     time_chunk: int | None = None
+
+    @property
+    def batch_tile(self) -> int:
+        return self.block_b
 
 
 def working_set_bytes(seq_len: int, n_layers: int, p_width: int, hidden: int,

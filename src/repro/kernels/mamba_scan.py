@@ -71,9 +71,22 @@ class MambaBlocks(NamedTuple):
     ``chunk`` here changes I/O granularity only (the recurrence is
     per-step either way) — larger chunks mean fewer grid steps and larger
     streamed tiles; ``chunk == seq_len`` is the whole-T-resident layout,
-    one grid step per batch tile."""
+    one grid step per batch tile.
+
+    Presents the family-generic ``core/tiling.TilePlan`` interface:
+    ``batch_tile`` is this family's ``block_b``, ``time_chunk`` its
+    ``chunk`` (whole-T residency is spelled ``chunk == seq_len`` here,
+    never None)."""
     block_b: int
     chunk: int
+
+    @property
+    def batch_tile(self) -> int:
+        return self.block_b
+
+    @property
+    def time_chunk(self) -> int:
+        return self.chunk
 
 
 def working_set_bytes(seq_len: int, d_inner: int, d_state: int,

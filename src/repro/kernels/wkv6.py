@@ -90,9 +90,22 @@ class WkvBlocks(NamedTuple):
     the (C, C, dk) f32 intra-chunk decay tensor, the dominant VMEM term.
     ``bh_tile`` is the batch axis of the same surface — how many
     independent batch-head rows share one grid step (coarser = fewer grid
-    steps, more streamed-window and state bytes per step)."""
+    steps, more streamed-window and state bytes per step).
+
+    Presents the family-generic ``core/tiling.TilePlan`` interface:
+    ``batch_tile`` is this family's ``bh_tile`` (fused B*H rows),
+    ``time_chunk`` its ``chunk`` (this grid always streams time, so it is
+    never None)."""
     chunk: int
     bh_tile: int = 1
+
+    @property
+    def batch_tile(self) -> int:
+        return self.bh_tile
+
+    @property
+    def time_chunk(self) -> int:
+        return self.chunk
 
 
 def working_set_bytes(seq_len: int, dk: int, dv: int, chunk: int,
@@ -177,10 +190,14 @@ def choose_blocks(n_bh: int, seq_len: int, dk: int, dv: int, *,
 def choose_chunk(seq_len: int, dk: int, dv: int, *, target: int = 32,
                  dtype_bytes: int = 4, vmem_budget: int | None = None,
                  mode: str = "fwd") -> WkvBlocks | None:
-    """The chunk-only decision at ``bh_tile=1`` (one BH row per grid step —
-    the layout the registered ``chunked_scan`` plan serves, keeping grid
-    steps at exactly BH * ceil(T/C)).  See ``choose_blocks`` for the joint
-    surface."""
+    """DEPRECATED thin alias for ``choose_blocks(1, ...)`` — the chunk-only
+    decision at ``bh_tile=1`` (one BH row per grid step, grid steps exactly
+    BH * ceil(T/C)).  ``choose_blocks`` is the joint surface every family
+    exposes; call it directly."""
+    import warnings
+    warnings.warn("wkv6.choose_chunk is deprecated; call "
+                  "choose_blocks(1, seq_len, dk, dv, ...)",
+                  DeprecationWarning, stacklevel=2)
     return choose_blocks(1, seq_len, dk, dv, target=target,
                          dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
                          mode=mode)

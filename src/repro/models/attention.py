@@ -156,6 +156,105 @@ def prefill_cache(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
     return new
 
 
+def chunk_prefill_attention(p: dict, x: jax.Array, cache: dict,
+                            cfg: ModelConfig, positions: jax.Array
+                            ) -> tuple[jax.Array, dict]:
+    """One fixed-shape prefill CHUNK against the decode cache.
+
+    The chunked-admission middle ground between ``apply_attention`` (whole
+    sequence, no cache read) and ``decode_attention`` (one token): x is a
+    (B, L, d) slice of the prompt whose absolute positions are
+    ``positions`` (B, L) — consecutive, continuing wherever the previous
+    chunk stopped.  The chunk's roped k/v are scattered into the cache at
+    their position slots (ring slots ``pos % S_c`` for sliding-window
+    layouts, mirroring ``decode_attention``), and the chunk's queries
+    attend the FULL cache under a content-position validity mask, so
+    chunk k sees every key chunks 0..k-1 wrote plus its own causal prefix.
+
+    Token identity with whole-prompt prefill holds as long as the ring
+    never evicts a position a later query still needs — i.e. for
+    sliding-window layouts only while the whole prompt fits the ring
+    (prompt_len <= S_c); the serving engine routes longer windowed
+    prompts through the whole-prompt path instead.
+
+    Returns (attention output (B, L, d), cache writes dict).
+    """
+    from repro.partitioning import constrain
+
+    B, L, _ = x.shape
+    q, k, v = _qkv(p, x)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    s_c = cache["k"].shape[1]
+    w = cfg.sliding_window or 0
+    slots = (positions % s_c) if w else positions     # (B, L) write slots
+    b_idx = jnp.arange(B)[:, None]
+
+    def dus(name, val):
+        tgt = cache[name]
+        return tgt.at[b_idx, slots].set(val.astype(tgt.dtype))
+
+    if cfg.kv_quant:
+        kq, ks = _quantize(k)
+        vq, vs = _quantize(v)
+        new_kv = {"k": dus("k", kq), "v": dus("v", vq),
+                  "k_scale": dus("k_scale", ks),
+                  "v_scale": dus("v_scale", vs)}
+    else:
+        new_kv = {"k": dus("k", k), "v": dus("v", v)}
+    k_cache, v_cache = new_kv["k"], new_kv["v"]
+
+    hkv = cfg.n_kv_heads
+    group = cfg.n_heads // hkv
+    dh = cfg.resolved_head_dim
+    scale = dh ** -0.5
+    q5 = q.reshape(B, L, hkv, group, dh)
+    q5 = q5.astype(x.dtype if cfg.kv_quant else k_cache.dtype)
+    scores = jnp.einsum("blkgd,bskd->bkgls", q5,
+                        k_cache.astype(q5.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    if cfg.kv_quant:
+        # per-(token, head) dequant scales fold into the scores, exactly
+        # as in decode_attention
+        scores = scores * jnp.swapaxes(new_kv["k_scale"], 1, 2)[:, :, None,
+                                                                None]
+    scores = constrain(scores, ("batch", None, None, None, "cache_seq"))
+
+    # content-position mask: slot j holds the key of absolute position
+    # content_pos[j]; a query at qp may attend it iff 0 <= content_pos <=
+    # qp (and within the sliding window).  The same formula covers the
+    # full layout (content_pos == j for written slots, negative
+    # otherwise) and the ring (latest write wins), including the
+    # intra-chunk causal half: slots this chunk wrote for positions > qp
+    # resolve to content_pos > qp and are masked.
+    idx = jnp.arange(s_c)                             # (S_c,)
+    p_last = positions[:, -1][:, None]                # (B, 1) chunk end
+    written = jnp.mod(p_last - idx[None], s_c) < L    # (B, S_c)
+    prev_last = p_last - L                            # end of chunks 0..k-1
+    content_pos = jnp.where(
+        written, p_last - jnp.mod(p_last - idx[None], s_c),
+        prev_last - jnp.mod(prev_last - idx[None], s_c))
+    qp = positions[:, :, None]                        # (B, L, 1)
+    cp = content_pos[:, None, :]                      # (B, 1, S_c)
+    valid = (cp >= 0) & (cp <= qp)                    # (B, L, S_c)
+    if w:
+        valid &= (qp - cp) < w
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)           # (B,Hkv,g,L,S_c) f32
+    if cfg.kv_quant:
+        probs = probs * jnp.swapaxes(new_kv["v_scale"], 1, 2)[:, :, None,
+                                                              None]
+        out = jnp.einsum("bkgls,bskd->blkgd", probs.astype(x.dtype),
+                         v_cache.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bkgls,bskd->blkgd", probs.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+    out = out.reshape(B, L, cfg.n_heads, dh).astype(x.dtype)
+    y = jnp.einsum("blhk,hkd->bld", out, p["wo"])
+    return y, new_kv
+
+
 # ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------

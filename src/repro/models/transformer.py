@@ -205,7 +205,7 @@ def _dummy_cache_slot(cfg: ModelConfig, slot: int, batch: int) -> dict:
 def _apply_block(slot_p, cfg: ModelConfig, slot: int, x, cache_slot,
                  positions, pos, aux, mode: str):
     """One block (mix + mlp).  cache_slot has NO group dim here (inside
-    scan).  mode: 'full' | 'prefill' | 'decode'."""
+    scan).  mode: 'full' | 'prefill' | 'prefill_chunk' | 'decode'."""
     kind = cfg.layer_kind(slot)
     x = constrain(x, ("batch", _sax(cfg), None))
     h = common.apply_norm(slot_p["ln1"], x, cfg.norm)
@@ -214,6 +214,10 @@ def _apply_block(slot_p, cfg: ModelConfig, slot: int, x, cache_slot,
         if mode == "decode":
             out, kv = attention.decode_attention(slot_p["mix"], h,
                                                  cache_slot, pos, cfg)
+            new_cache.update(kv)
+        elif mode == "prefill_chunk":
+            out, kv = attention.chunk_prefill_attention(
+                slot_p["mix"], h, cache_slot, cfg, positions)
             new_cache.update(kv)
         else:
             out = attention.apply_attention(slot_p["mix"], h, cfg, positions)
@@ -338,6 +342,52 @@ def prefill(params, cfg: ModelConfig, cache, batch: dict
     logits = lm_logits(params, cfg, x[:, -1:])
     new_cache = {"pos": jnp.asarray(S, jnp.int32), "slots": new_slots}
     del aux
+    return logits, new_cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache, batch: dict
+                  ) -> tuple[jax.Array, dict]:
+    """One fixed-shape prefill chunk: a (B, L) prompt slice continuing at
+    absolute position ``cache['pos']`` (a TRACED scalar, unlike
+    ``prefill``'s static S — one compiled executable serves every chunk of
+    length L wherever it lands in the prompt).
+
+    Attention scatters the chunk's k/v into the cache and attends the full
+    cache under a content-position mask
+    (attention.chunk_prefill_attention); rwkv/mamba consume the cache as
+    their incoming recurrent state — for them a chunk is mathematically
+    just a shorter ``prefill`` that starts from carried state.  Returns
+    (logits of the chunk's LAST position, updated cache with
+    ``pos += L``) — only the final chunk's logits sample a real token.
+
+    Not valid for vis-token prompts (cfg.n_vis_tokens): the learned
+    vis prefix is prepended whole at embed time and cannot be sliced
+    into token chunks; callers route those through ``prefill``.
+    """
+    x = embed_inputs(params, cfg, batch)
+    B, L = x.shape[0], x.shape[1]
+    base = cache["pos"]
+    positions = base + jnp.broadcast_to(jnp.arange(L), (B, L))
+    period = cfg.period
+
+    def group_fn(carry, xs):
+        x = carry
+        group_params, cache_slots = xs
+        new_slots = []
+        a = {}
+        for s in range(period):
+            x, new_c, a = _apply_block(group_params[s], cfg, s, x,
+                                       cache_slots[s], positions, None, a,
+                                       "prefill_chunk")
+            new_slots.append(new_c)
+        return x, tuple(new_slots)
+
+    x, new_slots = jax.lax.scan(group_fn, x,
+                                (params["blocks"], cache["slots"]))
+    x = common.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_logits(params, cfg, x[:, -1:])
+    new_cache = {"pos": base + jnp.asarray(L, jnp.int32),
+                 "slots": new_slots}
     return logits, new_cache
 
 

@@ -10,6 +10,14 @@ host-memory leak.
 
 Percentiles use nearest-rank on a sorted snapshot — exact for the sample
 sizes here, no interpolation surprises at p99 with small n.
+
+Serving instruments (pre-created by SlotEngine so snapshots always carry
+the full schema): counters serving/{ticks,tokens,retired,deadline_miss,
+quarantined,retries,shed}; histograms serving/ttft_s (admission -> first
+token host-visible — under chunked prefill this spans every interleaved
+chunk, the TTFT-under-contention number the adversary benchmarks bound),
+serving/tbt_s, and serving/prefill_chunk_s (per fixed-shape chunk
+dispatch; chunked mode only).
 """
 from __future__ import annotations
 

@@ -17,7 +17,10 @@ Design constraints (ISSUE 7 tentpole):
   inverse.  Span records are emitted at span *exit* (so a child's record
   precedes its parent's) carrying ``ts`` (entry time) and ``dur_s``.
 
-Record schema (see ROADMAP §Observability):
+Record schema (see ROADMAP §Observability for the full event-name list —
+serving admission emits ``serve/admit`` per admitted request and, under
+chunked prefill, one ``serve/prefill_start`` plus one
+``serve/prefill_chunk`` per fixed-shape chunk dispatch):
 
     {"type": "span"|"event", "name": str, "seq": int, "ts": float,
      "span": int|None, "parent": int|None, "dur_s": float (spans only),

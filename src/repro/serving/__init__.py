@@ -1,13 +1,15 @@
-from repro.serving.engine import Engine, SlotEngine
+from repro.serving.engine import Engine, EngineConfig, SlotEngine
 from repro.serving.faults import (FaultInjector, FaultPlan, InjectedFault,
                                   LanePoison, PrefillFault, QueueFlood,
                                   SlowTick)
-from repro.serving.slots import (FINISH_REASONS, FinishReason, QueueFull,
-                                 Request, RequestQueue, Result, Slot,
-                                 SlotManager, TokenEvent)
+from repro.serving.slots import (FINISH_REASONS, FinishReason, PrefillLane,
+                                 QueueFull, Request, RequestQueue, Result,
+                                 Slot, SlotManager, TokenEvent,
+                                 chunk_schedule)
 
-__all__ = ["Engine", "SlotEngine", "Request", "Result", "RequestQueue",
-           "QueueFull", "Slot", "SlotManager", "TokenEvent",
+__all__ = ["Engine", "EngineConfig", "SlotEngine", "Request", "Result",
+           "RequestQueue", "QueueFull", "Slot", "SlotManager", "TokenEvent",
+           "PrefillLane", "chunk_schedule",
            "FinishReason", "FINISH_REASONS", "FaultPlan", "FaultInjector",
            "InjectedFault", "LanePoison", "PrefillFault", "SlowTick",
            "QueueFlood"]

@@ -33,7 +33,9 @@ token ids).
 from __future__ import annotations
 
 import collections
+import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Iterator
 
 import jax
@@ -47,10 +49,89 @@ from repro.obs.metrics import Metrics
 from repro.models.registry import Model
 from repro.partitioning import split
 from repro.serving import faults as faults_lib
-from repro.serving.slots import (FinishReason, QueueFull, Request,
-                                 RequestQueue, Result, SlotManager,
-                                 TokenEvent)
+from repro.serving.slots import (FinishReason, PrefillLane, QueueFull,
+                                 Request, RequestQueue, Result, SlotManager,
+                                 TokenEvent, chunk_schedule)
 from repro import steps as steps_lib
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """The consolidated construction surface for both engines — every
+    queue/retry/ladder/fault/chunk knob in one dataclass instead of
+    sprawled across ``Engine``/``SlotEngine`` kwargs.  Engines take
+    ``config=EngineConfig(...)``; the old per-engine kwargs remain as
+    deprecated aliases (DeprecationWarning) so downstream callers migrate
+    at their own pace.  Unused knobs are simply ignored by the engine that
+    does not implement them (``pool_capacity`` is a wave knob — the slot
+    engine always runs ONE resident cache; ``queue_capacity``/retry/
+    ladder/chunk knobs are slot knobs).
+
+    Chunked prefill (``prefill_chunk_len``):
+      * ``None`` (default) keeps whole-prompt admission — one B=1 prefill
+        dispatch per request, one compiled executable per DISTINCT prompt
+        length, and one long prompt stalls every resident lane's decode
+        tick for its whole prefill;
+      * an int enables chunk-interleaved admission: prompts prefill
+        through up-to-``prefill_lanes`` PrefillLane state machines, at
+        most ONE fixed-shape chunk between decode ticks, and admit into a
+        slot only when fully prefilled.  Greedy outputs are token-
+        identical to whole-prompt prefill — chunking changes scheduling,
+        not math.
+    """
+    n_slots: int = 4
+    max_seq: int = 128
+    queue_capacity: int = 16
+    pool_capacity: int = 2
+    #: admission-prefill chunk length (None = whole-prompt admission)
+    prefill_chunk_len: int | None = None
+    #: concurrent partially-prefilled requests (chunked mode only)
+    prefill_lanes: int = 2
+    retry_budget: int = 0
+    retry_backoff_s: float = 0.0
+    tick_slo_s: float | None = None
+    slo_breach_ticks: int = 3
+    slo_recover_ticks: int = 8
+    shed_margin: float = 1.0
+    ladder: list[str] | None = None
+    faults: faults_lib.FaultPlan | None = None
+
+    @property
+    def batch_size(self) -> int:
+        """Wave-engine naming for the batch axis (== ``n_slots``)."""
+        return self.n_slots
+
+
+#: deprecated per-engine kwarg -> EngineConfig field
+_WAVE_ALIASES = {"batch_size": "n_slots", "max_seq": "max_seq",
+                 "pool_capacity": "pool_capacity"}
+_SLOT_ALIASES = {k: k for k in (
+    "n_slots", "max_seq", "queue_capacity", "faults", "retry_budget",
+    "retry_backoff_s", "tick_slo_s", "slo_breach_ticks",
+    "slo_recover_ticks", "shed_margin", "ladder")}
+
+
+def _resolve_config(cls_name: str, config: EngineConfig | None,
+                    legacy: dict, aliases: dict) -> EngineConfig:
+    """Fold an engine's deprecated construction kwargs into EngineConfig.
+
+    Exactly one spelling per call: legacy kwargs warn (DeprecationWarning
+    pointing at the caller) and build a fresh config through the alias
+    map; mixing them with an explicit ``config`` is ambiguous and raises."""
+    if not legacy:
+        return config if config is not None else EngineConfig()
+    unknown = sorted(set(legacy) - set(aliases))
+    if unknown:
+        raise TypeError(
+            f"{cls_name}: unexpected keyword argument(s) {unknown}")
+    if config is not None:
+        raise ValueError(
+            f"{cls_name}: pass config=EngineConfig(...) OR the deprecated "
+            f"kwargs {sorted(legacy)}, not both")
+    warnings.warn(
+        f"{cls_name}({', '.join(sorted(legacy))}) kwargs are deprecated; "
+        "pass config=EngineConfig(...)", DeprecationWarning, stacklevel=3)
+    return EngineConfig(**{aliases[k]: v for k, v in legacy.items()})
 
 
 class _EngineBase:
@@ -110,11 +191,14 @@ class _EngineBase:
 class Engine(_EngineBase):
     """Lockstep wave engine — the coarse-batching baseline."""
 
-    def __init__(self, model: Model, params: Any, *, batch_size: int = 4,
-                 max_seq: int = 128, pool_capacity: int = 2,
-                 sensor=None, extra_plans: dict[str, Callable] | None = None):
-        super().__init__(model, params, batch_size=batch_size,
-                         max_seq=max_seq, pool_capacity=pool_capacity,
+    def __init__(self, model: Model, params: Any, *,
+                 config: EngineConfig | None = None, sensor=None,
+                 extra_plans: dict[str, Callable] | None = None, **legacy):
+        config = _resolve_config("Engine", config, legacy, _WAVE_ALIASES)
+        self.config = config
+        super().__init__(model, params, batch_size=config.n_slots,
+                         max_seq=config.max_seq,
+                         pool_capacity=config.pool_capacity,
                          sensor=sensor, extra_plans=extra_plans,
                          per_lane_pos=False)
 
@@ -211,66 +295,107 @@ class SlotEngine(_EngineBase):
     — per-lane positions keep attention exact, and rwkv/mamba/MoE-decode
     paths are lane-independent by construction.  Distinct prompt lengths
     compile distinct prefill executables (bucket upstream if that matters).
+
+    With ``EngineConfig.prefill_chunk_len`` set, admission prefill is
+    CHUNK-INTERLEAVED instead: up to ``prefill_lanes`` PrefillLane state
+    machines each prefill one prompt through fixed-shape segments
+    (slots.chunk_schedule), the tick loop advances at most ONE chunk
+    between decode ticks (round-robin across lanes), and a lane admits
+    into a slot only when fully prefilled.  Resident lanes therefore
+    never stall for more than one chunk on a long-prompt admission — the
+    lockstep pathology whole-prompt admission readmits — while greedy
+    outputs stay token-identical to whole-prompt prefill and the compiled
+    prefill shapes collapse from one-per-prompt-length to one per segment
+    length ({chunk_len} plus descending powers of two for remainders).
     """
 
     #: smoothing for the observed tick-latency EMA the shed predicate and
     #: watchdog read (matches core.scheduler.Plan.ema)
     TICK_EMA = 0.3
 
-    def __init__(self, model: Model, params: Any, *, n_slots: int = 4,
-                 max_seq: int = 128, queue_capacity: int = 16,
-                 sensor=None, extra_plans: dict[str, Callable] | None = None,
-                 clock: Callable[[], float] = None,
-                 faults: faults_lib.FaultPlan | None = None,
-                 retry_budget: int = 0, retry_backoff_s: float = 0.0,
-                 tick_slo_s: float | None = None, slo_breach_ticks: int = 3,
-                 slo_recover_ticks: int = 8, shed_margin: float = 1.0,
-                 ladder: list[str] | None = None):
-        """Fault-tolerance knobs (all optional; defaults = prior behaviour):
-
-        ``faults``            seeded chaos schedule (serving/faults.FaultPlan)
-                              threaded into the tick/prefill/watchdog hooks;
-        ``retry_budget``      re-admissions allowed per request after a
-                              quarantine or prefill failure (0 = fail fast
-                              with finish_reason='error');
-        ``retry_backoff_s``   base of the exponential re-admission backoff
-                              (attempt k waits retry_backoff_s * 2**k);
-        ``tick_slo_s``        per-tick latency SLO the watchdog enforces
-                              (None disables the degradation ladder);
-        ``slo_breach_ticks``  consecutive over-SLO ticks before one ladder
-                              step down; ``slo_recover_ticks`` consecutive
-                              healthy ticks before one step back up;
-        ``shed_margin``       multiple of the tick-latency EMA a queued
-                              deadline must clear to survive the (degraded-
-                              mode only) shed sweep;
-        ``ladder``            plan names ordered most-expensive-first, the
-                              rungs Scheduler.degrade() walks down.
-        """
+    def __init__(self, model: Model, params: Any, *,
+                 config: EngineConfig | None = None, sensor=None,
+                 extra_plans: dict[str, Callable] | None = None,
+                 clock: Callable[[], float] = None, **legacy):
+        """All queue/retry/ladder/fault/chunk knobs live on ``config``
+        (EngineConfig, see its docstring); the old per-engine kwargs are
+        accepted as deprecated aliases.  ``sensor``/``extra_plans``/
+        ``clock`` stay real kwargs — they are collaborator objects, not
+        configuration."""
+        config = _resolve_config("SlotEngine", config, legacy, _SLOT_ALIASES)
+        self.config = config
+        n_slots, max_seq = config.n_slots, config.max_seq
         super().__init__(model, params, batch_size=n_slots, max_seq=max_seq,
                          pool_capacity=1, sensor=sensor,
                          extra_plans=extra_plans, per_lane_pos=True)
         self.n_slots = n_slots
         self.clock = clock or time.monotonic
-        self.queue = RequestQueue(queue_capacity, clock=self.clock)
+        self.queue = RequestQueue(config.queue_capacity, clock=self.clock)
         # completed Results land here until the caller consumes them with
         # take_finished() — long-running submit()/stream() users must drain
         # it, or host memory grows with every retired request
         self.finished: dict[int, Result] = {}
-        # B=1 scratch the admission prefill runs through (donated each
-        # admission, so it is ONE buffer for the life of the engine).
-        # The jit zeroes it in place first — rwkv/mamba prefill consumes
-        # the cache as its initial state, so a previous occupant's state
-        # must not leak into the next prompt — then samples the prompt's
-        # first greedy token, all in one dispatch.
+
+        # -- chunked prefill (admission interleaving) -----------------------
+        w = self.cfg.sliding_window or 0
+        #: longest prompt the CHUNKED path serves token-identically: a
+        #: windowed KV ring starts evicting once the prompt outruns the
+        #: cache seq axis, and mid-chunk queries then see less in-window
+        #: history than whole-prompt flash attention would give them.
+        #: Longer windowed prompts fall back to whole-prompt admission.
+        self._chunk_safe_len = min(max_seq, w) if w else max_seq
+        self._chunk_len = config.prefill_chunk_len
+        self.prefill_lanes = config.prefill_lanes
+        chunked = self._chunk_len is not None
+        if chunked:
+            if self.cfg.n_vis_tokens:
+                raise ValueError(
+                    "chunked prefill cannot serve vis-token prompts (the "
+                    "vision prefix is not sliceable); keep "
+                    "prefill_chunk_len=None")
+            if not 0 < self._chunk_len <= self._chunk_safe_len:
+                raise ValueError(
+                    f"prefill_chunk_len {self._chunk_len} outside (0, "
+                    f"{self._chunk_safe_len}] — chunks longer than the "
+                    "cache seq axis would scatter duplicate ring slots")
+            if self.prefill_lanes < 1:
+                raise ValueError(
+                    f"prefill_lanes {self.prefill_lanes} must be >= 1")
+
+        # B=1 scratch the admission prefill runs through (donated per
+        # dispatch).  Whole-prompt mode keeps ONE permanently checked-out
+        # buffer; chunked mode pools ``prefill_lanes`` of them (one per
+        # concurrent PrefillLane, checked out at lane start and returned —
+        # zeroed through the pool's donated reset — at admission, abort or
+        # failure), plus the persistent whole-prompt buffer when windowed
+        # fallbacks are possible.  Either way the pool is built ONCE:
+        # ``buffers_built`` stays at capacity for the life of the engine.
         scratch_abs, _ = split(jax.eval_shape(
             lambda: model.init_cache(1, max_seq)))
         self._scratch_abs = scratch_abs
-        self._scratch_pool = StatePool(scratch_abs, capacity=1)
-        self._scratch = self._scratch_pool.checkout()
+        self._fallback = chunked and bool(w) and self._chunk_safe_len < max_seq
+        self._scratch_pool = StatePool(
+            scratch_abs, capacity=(self.prefill_lanes + int(self._fallback)
+                                   if chunked else 1))
+        self._scratch = (self._scratch_pool.checkout()
+                         if not chunked or self._fallback else None)
 
         def prefill_sample(p, c, b):
+            # zero the donated scratch first — rwkv/mamba prefill consumes
+            # the cache as its initial state, so a previous occupant's
+            # state must not leak into the next prompt — then sample the
+            # prompt's first greedy token, all in one dispatch
             c = jax.tree.map(lambda a: a * 0, c)
             logits, c = steps_lib.prefill_step(self.cfg, p, c, b)
+            return steps_lib.greedy_sample(logits)[..., 0], c
+
+        def prefill_chunk_sample(p, c, b, first):
+            # ``first`` is a TRACED scalar bool, so chunk 0 (zero the
+            # scratch, prefill_sample's reset) and continuation chunks
+            # share ONE executable per segment length — the one-shape-per-
+            # (chunk_len,) contract
+            c = jax.tree.map(lambda a: jnp.where(first, a * 0, a), c)
+            logits, c = steps_lib.chunked_prefill_step(self.cfg, p, c, b)
             return steps_lib.greedy_sample(logits)[..., 0], c
 
         # pre-create the serving instruments so metrics snapshots (and the
@@ -282,26 +407,38 @@ class SlotEngine(_EngineBase):
             self.metrics.counter(name)
         self.metrics.histogram("serving/ttft_s")
         self.metrics.histogram("serving/tbt_s")
+        if chunked:
+            self.metrics.histogram("serving/prefill_chunk_s")
 
         token_tail = ((self.cfg.n_codebooks,) if self.cfg.n_codebooks
                       else ())
         self._prefill_sample = jax.jit(prefill_sample, donate_argnums=(1,))
+        self._prefill_chunk = jax.jit(prefill_chunk_sample,
+                                      donate_argnums=(1,))
+        # device-resident chunk-0 flags, uploaded once and reused — the
+        # chunked path keeps the no-per-dispatch-upload property
+        self._first_true = jnp.asarray(True)
+        self._first_false = jnp.asarray(False)
+        self._lanes: list[PrefillLane] = []
+        self._rr = 0                 # round-robin cursor over live lanes
         self.manager = SlotManager(
             self.pool.checkout(), n_slots, token_tail=token_tail,
             clock=self.clock)
 
         # -- fault tolerance ------------------------------------------------
+        ladder = config.ladder
         unknown = set(ladder or []) - set(self.scheduler.plans)
         if unknown:
             raise ValueError(
                 f"ladder names unregistered plans: {sorted(unknown)}")
         self.scheduler.ladder = list(ladder or [])
-        self.retry_budget = retry_budget
-        self.retry_backoff_s = retry_backoff_s
-        self.tick_slo_s = tick_slo_s
-        self.slo_breach_ticks = slo_breach_ticks
-        self.slo_recover_ticks = slo_recover_ticks
-        self.shed_margin = shed_margin
+        self.retry_budget = config.retry_budget
+        self.retry_backoff_s = config.retry_backoff_s
+        self.tick_slo_s = config.tick_slo_s
+        self.slo_breach_ticks = config.slo_breach_ticks
+        self.slo_recover_ticks = config.slo_recover_ticks
+        self.shed_margin = config.shed_margin
+        faults = config.faults
         self.injector = None if faults is None else faults_lib.FaultInjector(
             faults, n_slots, vocab=self.cfg.vocab, max_seq=max_seq,
             token_tail=token_tail)
@@ -425,7 +562,7 @@ class SlotEngine(_EngineBase):
         """Containment for an admission prefill that raised: emit the
         serve/fault event, then retry or terminate the request."""
         injected = isinstance(err, faults_lib.InjectedFault)
-        if not injected and any(
+        if not injected and self._scratch is not None and any(
                 getattr(a, "is_deleted", lambda: False)()
                 for a in jax.tree.leaves(self._scratch)):
             # a REAL prefill exception may have consumed the donated
@@ -440,6 +577,164 @@ class SlotEngine(_EngineBase):
         reason = self._fail_or_retry(req, now)
         if reason is not None:
             yield self._terminal(req, reason)
+
+    # -- chunked admission (the tentpole) ------------------------------
+    def _lane_failed(self, lane: PrefillLane, now: float, err: Exception
+                     ) -> Iterator[TokenEvent]:
+        """Containment for a chunked-prefill attempt that raised: the
+        lane's PARTIAL state is discarded (its scratch returns to the pool
+        through the donated zeroing reset), so a retry restarts from chunk
+        0 with a clean cache — token-identical to an unfaulted admission."""
+        injected = isinstance(err, faults_lib.InjectedFault)
+        cache = lane.cache
+        if not injected and any(
+                getattr(a, "is_deleted", lambda: False)()
+                for a in jax.tree.leaves(cache)):
+            # same rebuild rule as _prefill_failed: only a REAL exception
+            # can strand a consumed donated buffer
+            cache = make_buffer(self._scratch_abs)
+        self._scratch_pool.give_back(cache)
+        tracer = trace_lib.get_tracer()
+        if tracer.enabled:
+            tracer.event("serve/fault", kind="prefill",
+                         uid=lane.request.uid, injected=injected,
+                         chunk=lane.chunks_done, error=repr(err))
+        reason = self._fail_or_retry(lane.request, now)
+        if reason is not None:
+            yield self._terminal(lane.request, reason)
+
+    def _advance_lane(self, lane: PrefillLane, now: float
+                      ) -> Iterator[TokenEvent]:
+        """Run ONE prefill chunk for ``lane``; on the final chunk, admit
+        the fully-prefilled request into a free slot (the invariant
+        ``len(self._lanes) <= free slots`` guarantees one exists — slots
+        are only ever occupied BY lane admission while lanes are live)."""
+        mgr = self.manager
+        req = lane.request
+        inj = self.injector
+        tracer = trace_lib.get_tracer()
+        seg = lane.schedule[0]
+        try:
+            if inj is not None and inj.take_prefill_fault(
+                    req.uid, lane.chunks_done):
+                # raised BEFORE the dispatch: the lane cache is untouched
+                raise faults_lib.InjectedFault(
+                    f"injected prefill fault, uid={req.uid}, "
+                    f"chunk={lane.chunks_done}")
+            toks = lane.prompt[..., lane.filled:lane.filled + seg]
+            first = (self._first_true if lane.chunks_done == 0
+                     else self._first_false)
+            t0 = time.perf_counter()
+            tok, lane.cache = self._prefill_chunk(
+                self.params, lane.cache,
+                self._prefill_batch(toks.reshape((1,) + toks.shape)), first)
+            tok = jax.block_until_ready(tok)
+            chunk_s = time.perf_counter() - t0
+        except Exception as err:      # containment: never escapes
+            self._lanes.remove(lane)
+            yield from self._lane_failed(lane, now, err)
+            return
+        lane.schedule.pop(0)
+        lane.filled += seg
+        lane.chunks_done += 1
+        lane.prefill_s += chunk_s
+        lane.last_tok = tok[0]               # () or (K,), device array
+        self.metrics.histogram("serving/prefill_chunk_s").observe(chunk_s)
+        if tracer.enabled:
+            tracer.event("serve/prefill_chunk", uid=req.uid,
+                         chunk=lane.chunks_done - 1, seg_len=seg,
+                         filled=lane.filled, chunk_s=chunk_s)
+        if not lane.done:
+            return
+        # fully prefilled: admit into a free slot and release the scratch
+        self._lanes.remove(lane)
+        idx = mgr.free_indices()[0]
+        tok0_np = np.asarray(lane.last_tok, np.int32)
+        ttft_s = time.perf_counter() - lane.t_start
+        mgr.admit(idx, req, lane.cache, lane.last_tok, lane.prefill_s,
+                  ttft_s=ttft_s)
+        self._scratch_pool.give_back(lane.cache)
+        self.metrics.histogram("serving/ttft_s").observe(ttft_s)
+        if tracer.enabled:
+            tracer.event("serve/admit", uid=req.uid, slot=idx,
+                         prompt_len=int(lane.prompt.shape[-1]),
+                         prefill_s=lane.prefill_s, ttft_s=ttft_s,
+                         chunks=lane.chunks_done)
+        ev = TokenEvent(req.uid, tok0_np, 0, done=(req.max_new_tokens <= 1))
+        yield ev
+        if ev.done:
+            self._finish(mgr.retire(idx))
+
+    def _admit_chunked(self, now: float, refill) -> Iterator[TokenEvent]:
+        """One scheduling round of chunk-interleaved admission: abort
+        deadline-expired lanes, start new lanes while scratch buffers AND
+        target slots are both free, then advance at most ONE chunk total
+        (round-robin across live lanes) before the decode tick runs."""
+        mgr = self.manager
+        metrics = self.metrics
+        inj = self.injector
+        tracer = trace_lib.get_tracer()
+
+        # partially-prefilled requests past their deadline abort here —
+        # the partial state is discarded and buffers_built is untouched
+        for lane in [ln for ln in self._lanes
+                     if ln.request.deadline_s is not None
+                     and ln.request.deadline_s <= now]:
+            self._lanes.remove(lane)
+            self._scratch_pool.give_back(lane.cache)
+            metrics.counter("serving/deadline_miss").inc()
+            yield self._terminal(lane.request, FinishReason.DEADLINE)
+
+        # start lanes: never more live lanes than prefill_lanes OR free
+        # slots — every lane must have a slot to land in when it finishes
+        while (len(self._lanes) < self.prefill_lanes
+               and len(self._lanes) < len(mgr.free_indices())):
+            yield from refill()
+            req = self.queue.pop()
+            if req is None:
+                break
+            if req.max_new_tokens <= 0:
+                # zero-budget request: complete without touching a lane
+                self.finished[req.uid] = Result(
+                    req.uid, mgr.empty_tokens(), 0.0, 0.0, [])
+                yield TokenEvent(req.uid, None, 0, done=True,
+                                 finish_reason=FinishReason.LENGTH)
+                continue
+            prompt = np.asarray(req.prompt, np.int32)
+            if prompt.shape[-1] > self._chunk_safe_len:
+                # windowed prompt past the cache seq axis: chunked replay
+                # through the ring is not token-identical, so this one
+                # admission takes the legacy whole-prompt path (and eats
+                # the full stall — the documented trade)
+                idx = mgr.free_indices()[0]
+                try:
+                    if inj is not None and inj.take_prefill_fault(req.uid):
+                        raise faults_lib.InjectedFault(
+                            f"injected prefill fault, uid={req.uid}")
+                    ev = self._admit_one(idx, req)
+                except Exception as err:
+                    yield from self._prefill_failed(req, now, err)
+                    continue
+                yield ev
+                if ev.done:
+                    self._finish(mgr.retire(idx))
+                continue
+            self._lanes.append(PrefillLane(
+                request=req, cache=self._scratch_pool.checkout(),
+                schedule=chunk_schedule(prompt.shape[-1], self._chunk_len),
+                prompt=prompt, t_start=time.perf_counter()))
+            if tracer.enabled:
+                tracer.event("serve/prefill_start", uid=req.uid,
+                             prompt_len=int(prompt.shape[-1]),
+                             n_chunks=len(self._lanes[-1].schedule))
+
+        # the chunk budget: ONE fixed-shape prefill dispatch per tick-loop
+        # iteration, shared round-robin — a short prompt behind a long
+        # adversary waits O(its own chunks), not the adversary's prefill
+        if self._lanes:
+            self._rr += 1
+            yield from self._advance_lane(
+                self._lanes[self._rr % len(self._lanes)], now)
 
     def _watchdog(self, observed_s: float, tick: int) -> None:
         """Tick-latency watchdog driving the degradation ladder: after
@@ -483,7 +778,7 @@ class SlotEngine(_EngineBase):
         inj = self.injector
         tick = 0
         while (pending or len(self.queue) or mgr.any_occupied
-               or self._retry_backlog):
+               or self._retry_backlog or self._lanes):
             now = self.clock()
             tracer = trace_lib.get_tracer()
 
@@ -558,33 +853,38 @@ class SlotEngine(_EngineBase):
                                      tick_ema_s=self._tick_ema)
                     yield self._terminal(req, FinishReason.SHED)
 
-            # step-granular admission into free slots
-            for idx in mgr.free_indices():
-                yield from refill_and_expire()
-                req = self.queue.pop()
-                if req is None:
-                    break
-                if req.max_new_tokens <= 0:
-                    # zero-budget request: complete without touching a lane
-                    self.finished[req.uid] = Result(
-                        req.uid, mgr.empty_tokens(), 0.0, 0.0, [])
-                    yield TokenEvent(req.uid, None, 0, done=True,
-                                     finish_reason=FinishReason.LENGTH)
-                    continue
-                try:
-                    if inj is not None and inj.take_prefill_fault(req.uid):
-                        # raised BEFORE the dispatch: the donated scratch
-                        # is untouched, exactly the guarantee InjectedFault
-                        # documents
-                        raise faults_lib.InjectedFault(
-                            f"injected prefill fault, uid={req.uid}")
-                    ev = self._admit_one(idx, req)
-                except Exception as err:  # containment: never escapes
-                    yield from self._prefill_failed(req, now, err)
-                    continue
-                yield ev
-                if ev.done:
-                    self._finish(mgr.retire(idx))
+            # step-granular admission — chunk-interleaved (at most one
+            # prefill chunk before the decode tick) or whole-prompt
+            if self._chunk_len is not None:
+                yield from self._admit_chunked(now, refill_and_expire)
+            else:
+                for idx in mgr.free_indices():
+                    yield from refill_and_expire()
+                    req = self.queue.pop()
+                    if req is None:
+                        break
+                    if req.max_new_tokens <= 0:
+                        # zero-budget request: complete without a lane
+                        self.finished[req.uid] = Result(
+                            req.uid, mgr.empty_tokens(), 0.0, 0.0, [])
+                        yield TokenEvent(req.uid, None, 0, done=True,
+                                         finish_reason=FinishReason.LENGTH)
+                        continue
+                    try:
+                        if (inj is not None
+                                and inj.take_prefill_fault(req.uid)):
+                            # raised BEFORE the dispatch: the donated
+                            # scratch is untouched, exactly the guarantee
+                            # InjectedFault documents
+                            raise faults_lib.InjectedFault(
+                                f"injected prefill fault, uid={req.uid}")
+                        ev = self._admit_one(idx, req)
+                    except Exception as err:  # containment: never escapes
+                        yield from self._prefill_failed(req, now, err)
+                        continue
+                    yield ev
+                    if ev.done:
+                        self._finish(mgr.retire(idx))
 
             queue_depth = len(self.queue)
             occupied = sum(1 for s in mgr.slots if s.occupied)
@@ -592,9 +892,11 @@ class SlotEngine(_EngineBase):
             metrics.gauge("serving/occupancy").set(occupied / mgr.n_slots)
 
             if not mgr.active_mask().any():
-                if pending or len(self.queue) or self._retry_backlog:
-                    # only expiries/zero-token admissions/backoffs left;
-                    # a pending-only backoff spins on the clock until ready
+                if (pending or len(self.queue) or self._retry_backlog
+                        or self._lanes):
+                    # only expiries/zero-token admissions/backoffs/partial
+                    # prefills left; keep looping — lanes advance one
+                    # chunk per iteration even with no decode to interleave
                     continue
                 break
 

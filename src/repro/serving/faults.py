@@ -52,9 +52,19 @@ class LanePoison:
 
 @dataclasses.dataclass(frozen=True)
 class PrefillFault:
-    """Fail ``uid``'s NEXT prefill attempt.  One-shot: a retry prefill
-    succeeds unless another PrefillFault for the same uid remains."""
+    """Fail one prefill ATTEMPT for ``uid``.  One-shot and per-attempt:
+    a retry succeeds unless another PrefillFault for the same uid remains.
+
+    ``chunk`` refines WHERE in a chunked admission the attempt fails:
+    ``None`` (default, and the whole-prompt path's only meaning) fires at
+    the next attempt whatever its chunk index; ``chunk=k`` fires at the
+    attempt that would run chunk ``k``, i.e. after ``k`` chunks of scratch
+    state have been filled.  Either way the fault raises BEFORE dispatch,
+    the lane's partial prefill state is discarded (donated zeroing reset),
+    and a retry restarts from chunk 0 — token-identical to an unfaulted
+    admission (asserted by tests/test_serving_faults.py)."""
     uid: int
+    chunk: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,7 +176,7 @@ class FaultInjector:
         self._poison: dict[int, set[int]] = {}
         self._slow: dict[int, float] = {}
         self._floods: dict[int, list[QueueFlood]] = {}
-        self._prefill: dict[int, int] = {}       # uid -> one-shots left
+        self._prefill: dict[int, list[int | None]] = {}  # uid -> chunks
         self._vocab = vocab
         self._max_seq = max_seq
         self._token_tail = token_tail
@@ -178,7 +188,7 @@ class FaultInjector:
             elif isinstance(f, SlowTick):
                 self._slow[f.tick] = self._slow.get(f.tick, 0.0) + f.extra_s
             elif isinstance(f, PrefillFault):
-                self._prefill[f.uid] = self._prefill.get(f.uid, 0) + 1
+                self._prefill.setdefault(f.uid, []).append(f.chunk)
             elif isinstance(f, QueueFlood):
                 self._floods.setdefault(f.tick, []).append(f)
 
@@ -190,13 +200,20 @@ class FaultInjector:
         """Injected extra latency folded into this tick's observed time."""
         return self._slow.get(tick, 0.0)
 
-    def take_prefill_fault(self, uid: int) -> bool:
-        """True exactly once per scheduled PrefillFault for ``uid``."""
-        left = self._prefill.get(uid, 0)
-        if left <= 0:
+    def take_prefill_fault(self, uid: int, chunk: int = 0) -> bool:
+        """True exactly once per scheduled PrefillFault for ``uid`` —
+        consumed per ATTEMPT, not per request.  ``chunk`` is the chunk
+        index this attempt would run (0 for the whole-prompt path, which
+        has exactly one attempt per admission); a scheduled fault with
+        ``chunk=None`` matches any attempt, ``chunk=k`` only the k-th."""
+        scheduled = self._prefill.get(uid)
+        if not scheduled:
             return False
-        self._prefill[uid] = left - 1
-        return True
+        for i, want in enumerate(scheduled):
+            if want is None or want == chunk:
+                scheduled.pop(i)
+                return True
+        return False
 
     def flood_requests(self, tick: int, now: float) -> list[Request]:
         """Build (and consume) this tick's synthetic flood requests."""

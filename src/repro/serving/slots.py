@@ -119,6 +119,57 @@ class TokenEvent:
     finish_reason: str | None = None
 
 
+def chunk_schedule(prompt_len: int, chunk_len: int) -> list[int]:
+    """Fixed-shape segment decomposition of one prompt: ``prompt_len //
+    chunk_len`` full chunks, then the remainder in DESCENDING powers of
+    two (its binary decomposition).
+
+    The point is the compiled-shape bound: every segment length is either
+    ``chunk_len`` or a power of two below it, so however ragged the
+    prompt mix, the chunked-prefill jit compiles at most
+    ``1 + ceil(log2(chunk_len))`` executables — unlike whole-prompt
+    admission, which compiles one per DISTINCT prompt length.  Bigger
+    segments come first, so the tail segments (the cheap ones) are what
+    lands between the final decode ticks before admission."""
+    if prompt_len < 0 or chunk_len < 1:
+        raise ValueError(f"chunk_schedule({prompt_len}, {chunk_len})")
+    full, r = divmod(prompt_len, chunk_len)
+    segs = [chunk_len] * full
+    for b in reversed(range(r.bit_length())):
+        if (r >> b) & 1:
+            segs.append(1 << b)
+    return segs
+
+
+@dataclasses.dataclass
+class PrefillLane:
+    """State machine for one partially-prefilled admission (the tentpole
+    of chunked prefill): holds the request, its B=1 scratch cache
+    (checked out from the engine's scratch StatePool; returned at
+    admission, abort, or failure — ``buffers_built`` stays at capacity
+    through every path), and the remaining fixed-shape segment schedule.
+
+    Lifecycle: FILLING (schedule non-empty) -> DONE (``done``: last
+    chunk's sampled token is ready and the lane admits into a free slot)
+    | ABORTED (deadline passed mid-prefill: partial state is discarded by
+    the pool's donated zeroing reset) | FAILED (a chunk attempt raised —
+    injected or real; retry restarts from chunk 0 with a zeroed scratch,
+    so the retried prefill is bit-identical to an unfaulted one)."""
+    request: Request
+    cache: Any                      # B=1 scratch, owned until release
+    schedule: list[int]             # remaining segment lengths
+    prompt: np.ndarray = None       # int32 view of request.prompt
+    filled: int = 0                 # prompt tokens already prefilled
+    chunks_done: int = 0
+    t_start: float = 0.0            # perf_counter at lane start (TTFT)
+    prefill_s: float = 0.0          # accumulated chunk dispatch time
+    last_tok: Any = None            # device token from the latest chunk
+
+    @property
+    def done(self) -> bool:
+        return not self.schedule
+
+
 class RequestQueue:
     """Bounded FIFO admission queue with deadline expiry."""
 

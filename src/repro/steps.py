@@ -66,6 +66,16 @@ def prefill_step(cfg: ModelConfig, params: Any, cache: Any, batch: dict
     return transformer.prefill(params, cfg, cache, batch)
 
 
+def chunked_prefill_step(cfg: ModelConfig, params: Any, cache: Any,
+                         batch: dict) -> tuple[jax.Array, Any]:
+    """One fixed-shape admission-prefill chunk (transformer.prefill_chunk):
+    ``batch['tokens']`` is a (B, L) prompt slice whose absolute start is
+    the TRACED ``cache['pos']``, so ONE compiled executable per chunk
+    length L serves every chunk of every prompt — the one-shape-per-
+    ``(chunk_len,)`` contract chunked admission is built on."""
+    return transformer.prefill_chunk(params, cfg, cache, batch)
+
+
 def decode_step(cfg: ModelConfig, params: Any, cache: Any, batch: dict
                 ) -> tuple[jax.Array, Any]:
     return transformer.decode_step(params, cfg, cache, batch)

@@ -347,6 +347,36 @@ def test_rwkv_choose_chunk_halves_under_pressure():
     assert wkv6_lib.choose_chunk(S, dk, dv, vmem_budget=64) is None
 
 
+def test_tile_plan_protocol_unifies_family_blocks():
+    """ISSUE 10 satellite: SeqBlocks / WkvBlocks / MambaBlocks all satisfy
+    the core.tiling.TilePlan protocol, so viability factories (and any
+    future consumer) can read batch_tile/time_chunk without knowing the
+    family-specific field names."""
+    from repro.core import tiling
+    from repro.kernels import lstm_seq, mamba_scan, wkv6 as wkv6_lib
+
+    seq = lstm_seq.SeqBlocks(block_b=8)
+    wkv = wkv6_lib.WkvBlocks(16)
+    mamba = mamba_scan.MambaBlocks(block_b=4, chunk=32)
+    for plan in (seq, wkv, mamba):
+        assert isinstance(plan, tiling.TilePlan)
+    assert seq.batch_tile == 8 and seq.time_chunk is None
+    assert wkv.batch_tile == wkv.bh_tile and wkv.time_chunk == 16
+    assert mamba.batch_tile == 4 and mamba.time_chunk == 32
+    # something without the accessors is NOT a TilePlan
+    assert not isinstance(object(), tiling.TilePlan)
+
+
+def test_wkv6_choose_chunk_deprecated_alias_over_choose_blocks():
+    from repro.kernels import wkv6 as wkv6_lib
+
+    S, dk, dv = 128, 64, 64
+    with pytest.warns(DeprecationWarning, match="choose_blocks"):
+        legacy = wkv6_lib.choose_chunk(S, dk, dv, target=16)
+    modern = wkv6_lib.choose_blocks(1, S, dk, dv, target=16)
+    assert legacy == modern
+
+
 def test_slot_engine_per_tick_choice_respects_two_family_viability():
     """Per-tick choice inside SlotEngine: with a faster-calibrated rwkv
     decode plan registered but bound non-viable, every tick's Decision

@@ -12,6 +12,7 @@ it); a deterministic two-seed parametrisation of the same property runs
 everywhere so the chaos path is never silently unexercised.
 """
 import dataclasses
+import gc
 
 import jax
 import numpy as np
@@ -20,9 +21,10 @@ import pytest
 from repro.configs import get_arch
 from repro.models import registry
 from repro.partitioning import split
-from repro.serving import (FINISH_REASONS, FaultPlan, FinishReason,
-                           LanePoison, PrefillFault, QueueFlood, Request,
-                           Result, SlotEngine, SlowTick)
+from repro.serving import (FINISH_REASONS, EngineConfig, FaultInjector,
+                           FaultPlan, FinishReason, LanePoison,
+                           PrefillFault, QueueFlood, Request, Result,
+                           SlotEngine, SlowTick)
 from repro import steps as steps_lib
 
 try:
@@ -31,6 +33,17 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:          # hypothesis is a dev-only dependency
     HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(autouse=True)
+def _release_compiled_state():
+    # Engines are built per-test, so their jit closures (and the XLA
+    # executables behind them) are garbage after each test.  Dropping them
+    # eagerly keeps the long-lived suite process from accumulating native
+    # compiler state across the many engine constructions in this module.
+    yield
+    gc.collect()
+    jax.clear_caches()
 
 
 def _tiny_cfg():
@@ -217,6 +230,77 @@ def test_prefill_fault_with_budget_retries_to_length(tiny, baseline):
         np.testing.assert_array_equal(r.tokens, baseline[r.uid])
     assert engine.metrics.counter("serving/retries").value == 1
     assert engine._scratch_pool.stats.buffers_built == 1
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill x faults: per-ATTEMPT consumption, chunk-k targeting
+# ---------------------------------------------------------------------------
+def test_take_prefill_fault_is_per_attempt_and_chunk_targeted():
+    """No model needed: the injector's chunk-matching semantics alone.
+    A ``chunk=k`` fault skips attempts for earlier chunks, fires exactly
+    once at chunk k, and is consumed — the retry's chunk-k attempt passes."""
+    plan = FaultPlan(seed=0, faults=(PrefillFault(uid=1, chunk=2),))
+    inj = FaultInjector(plan, 2, vocab=16, max_seq=32)
+    assert not inj.take_prefill_fault(1, chunk=0)
+    assert not inj.take_prefill_fault(1, chunk=1)
+    assert inj.take_prefill_fault(1, chunk=2)
+    assert not inj.take_prefill_fault(1, chunk=2)     # consumed per attempt
+    # chunk=None (the whole-prompt path's meaning) matches ANY attempt
+    inj2 = FaultInjector(FaultPlan(seed=0, faults=(PrefillFault(uid=3),)),
+                         2, vocab=16, max_seq=32)
+    assert inj2.take_prefill_fault(3, chunk=5)
+    assert not inj2.take_prefill_fault(3, chunk=5)
+    # the chunk field round-trips; pre-chunk plans (no field) still load
+    p = FaultPlan(seed=1, faults=(PrefillFault(uid=2, chunk=1),))
+    assert FaultPlan.from_json(p.to_json()) == p
+    legacy = {"seed": 0, "faults": [{"kind": "PrefillFault", "uid": 4}]}
+    assert FaultPlan.from_json(legacy).faults[0].chunk is None
+
+
+def test_chunk_k_fault_discards_partial_state_retry_token_identical(tiny):
+    """ISSUE 10 satellite: a fault at chunk k of a chunked admission
+    discards the k chunks of partial scratch state; the retry restarts
+    from chunk 0 and the final tokens are bit-identical to an unfaulted
+    chunked run (which is itself identical to whole-prompt prefill)."""
+    cfg, model, params = tiny
+    def reqs():
+        return _requests(cfg, lens=[13, 5], news=[4, 3])
+    clean = SlotEngine(model, params, config=EngineConfig(
+        n_slots=2, max_seq=64, queue_capacity=8,
+        prefill_chunk_len=4, prefill_lanes=2))
+    want = {r.uid: r.tokens for r in clean.serve(reqs())}
+
+    # prompt_len=13, chunk_len=4 -> schedule [4,4,4,1]; fault the third
+    # attempt (chunk=2), i.e. after 8 tokens of partial prefill state
+    faults = FaultPlan(seed=0, faults=(PrefillFault(uid=0, chunk=2),))
+    engine = SlotEngine(model, params, config=EngineConfig(
+        n_slots=2, max_seq=64, queue_capacity=8,
+        prefill_chunk_len=4, prefill_lanes=2,
+        faults=faults, retry_budget=1))
+    results = engine.serve(reqs())
+    for r in results:
+        assert r.finish_reason == FinishReason.LENGTH
+        np.testing.assert_array_equal(r.tokens, want[r.uid])
+    assert engine.metrics.counter("serving/retries").value == 1
+    # injected faults raise BEFORE dispatch: the lane scratch survives,
+    # is zero-reset on give_back, and the pool never rebuilds
+    sp = engine._scratch_pool.stats
+    assert sp.buffers_built == sp.capacity == 2
+    assert sp.outstanding == 0
+
+
+def test_chunk_k_fault_without_budget_is_error(tiny):
+    cfg, model, params = tiny
+    faults = FaultPlan(seed=0, faults=(PrefillFault(uid=0, chunk=1),))
+    engine = SlotEngine(model, params, config=EngineConfig(
+        n_slots=1, max_seq=64, queue_capacity=4,
+        prefill_chunk_len=4, prefill_lanes=1, faults=faults))
+    [res] = engine.serve(_requests(cfg, lens=[9], news=[3]))
+    assert res.finish_reason == FinishReason.ERROR
+    assert res.tokens.shape[-1] == 0
+    sp = engine._scratch_pool.stats
+    assert sp.buffers_built == sp.capacity == 1
+    assert sp.outstanding == 0
 
 
 # ---------------------------------------------------------------------------

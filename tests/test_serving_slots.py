@@ -5,6 +5,7 @@ quick-loop serving smoke.  The per-family slot-vs-wave equivalence sweeps
 build full reduced() archs and carry the ``slow`` marker.
 """
 import dataclasses
+import gc
 
 import jax
 import numpy as np
@@ -13,8 +14,19 @@ import pytest
 from repro.configs import get_arch
 from repro.models import registry
 from repro.partitioning import split
-from repro.serving import (Engine, QueueFull, Request, RequestQueue,
-                           SlotEngine)
+from repro.serving import (Engine, EngineConfig, QueueFull, Request,
+                           RequestQueue, SlotEngine, chunk_schedule)
+
+
+@pytest.fixture(autouse=True)
+def _release_compiled_state():
+    # Engines are built per-test, so their jit closures (and the XLA
+    # executables behind them) are garbage after each test.  Dropping them
+    # eagerly keeps the long-lived suite process from accumulating native
+    # compiler state across the many engine constructions in this module.
+    yield
+    gc.collect()
+    jax.clear_caches()
 
 
 def _tiny_cfg():
@@ -306,6 +318,167 @@ def test_wave_engine_pads_with_inactive_dummies(tiny):
     results = engine.serve(reqs)
     assert [r.uid for r in results] == [0, 1, 2, 3, 4]
     assert [r.tokens.shape[-1] for r in results] == [4, 2, 4, 4, 3]
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig (consolidated construction surface + deprecated aliases)
+# ---------------------------------------------------------------------------
+def test_engine_config_aliases_warn_and_match(tiny):
+    cfg, model, params = tiny
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = SlotEngine(model, params, n_slots=3, max_seq=64,
+                            queue_capacity=4, retry_budget=1)
+    modern = SlotEngine(model, params, config=EngineConfig(
+        n_slots=3, max_seq=64, queue_capacity=4, retry_budget=1))
+    assert legacy.config == modern.config
+    assert (legacy.n_slots, legacy.max_seq, legacy.retry_budget) == (3, 64, 1)
+    # behaviour, not just bookkeeping: same tokens either way
+    want = [r.tokens for r in modern.serve(_requests(cfg, [4, 6], [3, 2]))]
+    got = [r.tokens for r in legacy.serve(_requests(cfg, [4, 6], [3, 2]))]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    # wave engine: batch_size is the alias of n_slots
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        wave = Engine(model, params, batch_size=2, max_seq=32,
+                      pool_capacity=1)
+    assert wave.config.n_slots == wave.config.batch_size == 2
+
+
+def test_engine_config_rejects_mixed_and_unknown(tiny):
+    cfg, model, params = tiny
+    with pytest.raises(ValueError, match="not both"):
+        SlotEngine(model, params, config=EngineConfig(), n_slots=2)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        SlotEngine(model, params, bogus_knob=2)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        Engine(model, params, n_slots=2)      # a slot-only spelling
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (EngineConfig.prefill_chunk_len — admission interleaving)
+# ---------------------------------------------------------------------------
+def test_chunk_schedule_fixed_shapes():
+    # full chunks then the remainder's binary decomposition, descending
+    assert chunk_schedule(13, 8) == [8, 4, 1]
+    assert chunk_schedule(24, 8) == [8, 8, 8]
+    assert chunk_schedule(7, 8) == [4, 2, 1]
+    assert chunk_schedule(1, 8) == [1]
+    assert chunk_schedule(0, 8) == []
+    with pytest.raises(ValueError):
+        chunk_schedule(4, 0)
+    # the compiled-shape bound: whatever the prompt mix, segment lengths
+    # come from {chunk_len} U {powers of two below it}
+    allowed = {8, 4, 2, 1}
+    for s in range(1, 70):
+        segs = chunk_schedule(s, 8)
+        assert sum(segs) == s and set(segs) <= allowed
+
+
+def test_chunked_prefill_token_identity_and_one_shape(tiny):
+    """Chunking changes scheduling, not math: greedy tokens match
+    whole-prompt admission bit-for-bit, the chunk jit compiles exactly one
+    executable per DISTINCT segment length, and both pools keep their
+    build-time buffers through checkout/give_back lane churn."""
+    cfg, model, params = tiny
+    lens, news = [5, 29, 3, 13, 7, 21], [4, 6, 3, 5, 2, 4]
+    whole = SlotEngine(model, params, config=EngineConfig(
+        n_slots=3, max_seq=64))
+    want = whole.serve(_requests(cfg, lens, news, seed=3))
+
+    engine = SlotEngine(model, params, config=EngineConfig(
+        n_slots=3, max_seq=64, prefill_chunk_len=8, prefill_lanes=2))
+    got = engine.serve(_requests(cfg, lens, news, seed=3))
+    for w, g in zip(want, got):
+        assert g.finish_reason == "length"
+        np.testing.assert_array_equal(w.tokens, g.tokens)
+    segs = set()
+    for l in lens:
+        segs.update(chunk_schedule(l, 8))
+    assert engine._prefill_chunk._cache_size() == len(segs)
+    assert engine.pool.stats.buffers_built == 1
+    sp = engine._scratch_pool.stats
+    assert sp.buffers_built == sp.capacity == 2       # == prefill_lanes
+    assert sp.outstanding == 0                        # every lane released
+    assert engine.metrics.histogram("serving/prefill_chunk_s").count == \
+        sum(len(chunk_schedule(l, 8)) for l in lens)
+
+
+def test_decode_continues_during_chunked_prefill(tiny):
+    """The headline scheduling property: a resident short request keeps
+    producing decode tokens while a long-prompt adversary prefills in
+    chunks — admission stalls the tick loop by at most one chunk, not the
+    adversary's whole prefill."""
+    cfg, model, params = tiny
+    engine = SlotEngine(model, params, config=EngineConfig(
+        n_slots=2, max_seq=64, queue_capacity=4, prefill_chunk_len=4,
+        prefill_lanes=2))
+    short = Request(0, np.arange(1, 5, dtype=np.int32), max_new_tokens=12)
+    adversary = Request(1, np.arange(1, 25, dtype=np.int32),  # 6 chunks
+                        max_new_tokens=2)
+    events = []
+    results = engine.serve([short, adversary], on_token=events.append)
+    uids = [ev.uid for ev in events if ev.token is not None]
+    first_adv = uids.index(1)
+    # the short request decoded through the adversary's whole chunked
+    # prefill: several of its tokens land BEFORE the adversary's first
+    assert uids[:first_adv].count(0) >= 5
+    assert all(r.finish_reason == "length" for r in results)
+
+
+def test_partial_prefill_abort_keeps_pool_at_capacity(tiny):
+    """A deadline that lands mid-chunked-prefill aborts the lane: the
+    partial state is discarded through the pool's donated reset
+    (buffers_built untouched) and later requests are served normally."""
+    cfg, model, params = tiny
+    clock = FakeClock()
+    engine = SlotEngine(model, params, clock=clock, config=EngineConfig(
+        n_slots=1, max_seq=64, queue_capacity=4, prefill_chunk_len=4,
+        prefill_lanes=1))
+    doomed = Request(0, np.arange(1, 41, dtype=np.int32),   # 10 chunks
+                     max_new_tokens=4, deadline_s=4.0)      # dies mid-prefill
+    healthy = Request(1, np.arange(1, 7, dtype=np.int32), max_new_tokens=3)
+    results = engine.serve([doomed, healthy])
+    assert results[0].finish_reason == "deadline"
+    assert results[0].tokens.shape[-1] == 0
+    assert results[1].finish_reason == "length"
+    assert results[1].tokens.shape == (3,)
+    sp = engine._scratch_pool.stats
+    assert sp.buffers_built == sp.capacity == 1
+    assert sp.outstanding == 0
+    assert engine.pool.stats.buffers_built == 1
+    assert engine.metrics.counter("serving/deadline_miss").value == 1
+
+
+def test_chunked_rejects_invalid_config(tiny):
+    cfg, model, params = tiny
+    with pytest.raises(ValueError, match="prefill_chunk_len"):
+        SlotEngine(model, params, config=EngineConfig(
+            n_slots=2, max_seq=64, prefill_chunk_len=65))
+    with pytest.raises(ValueError, match="prefill_lanes"):
+        SlotEngine(model, params, config=EngineConfig(
+            n_slots=2, max_seq=64, prefill_chunk_len=4, prefill_lanes=0))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen2-0.5b",            # dense
+                                  "jamba-1.5-large-398b",  # ssm (mamba)
+                                  "rwkv6-3b"])             # rwkv
+def test_chunked_prefill_token_identity_per_family(arch):
+    """Chunked admission is token-identical to whole-prompt admission for
+    every serving family — attention replays the exact positions through
+    the chunk mask, rwkv/mamba prefill FROM their cache state natively."""
+    cfg = get_arch(arch).reduced()
+    model = registry.build(cfg)
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    reqs = _requests(cfg, [4, 10, 6, 8], [3, 8, 2, 5], seed=1)
+    whole = SlotEngine(model, params, config=EngineConfig(
+        n_slots=2, max_seq=32)).serve(reqs)
+    chunked = SlotEngine(model, params, config=EngineConfig(
+        n_slots=2, max_seq=32, prefill_chunk_len=4,
+        prefill_lanes=2)).serve(reqs)
+    for w, g in zip(whole, chunked):
+        assert np.array_equal(w.tokens, g.tokens), (w.uid, w.tokens,
+                                                    g.tokens)
 
 
 # ---------------------------------------------------------------------------
